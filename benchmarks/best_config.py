@@ -1,0 +1,59 @@
+"""Paper Table 3: best parallelism configuration per benchmark.
+
+Reported twice:
+  * FPGA/U280 with the paper's synthesizer PE counts (pure reproduction —
+    matches Table 3 at iteration=64 exactly, see tests/test_model.py), and
+  * TPU-v5e 8-chip slice with our re-derived model (the deployment config
+    this framework would actually launch).
+"""
+from __future__ import annotations
+
+from repro.configs import stencils
+from repro.core import model
+from repro.core.platform import DEFAULT_FPGA, DEFAULT_TPU
+
+PAPER_PE = {
+    "jacobi2d": 21, "jacobi3d": 15, "blur": 12, "seidel2d": 12,
+    "dilate": 18, "hotspot": 9, "heat3d": 12, "sobel2d": 12,
+}
+PAPER_TABLE3 = {   # iter=64 / iter=2 published picks
+    "jacobi2d": (("hybrid_s", 3, 7), ("spatial_r", 15, 1)),
+    "jacobi3d": (("hybrid_s", 3, 5), ("spatial_r", 15, 1)),
+    "blur": (("hybrid_s", 3, 4), ("spatial_r", 12, 1)),
+    "seidel2d": (("hybrid_s", 3, 4), ("spatial_r", 12, 1)),
+    "dilate": (("hybrid_s", 3, 6), ("hybrid_s", 6, 2)),
+    "hotspot": (("hybrid_s", 3, 3), ("spatial_s", 9, 1)),
+    "heat3d": (("hybrid_s", 3, 4), ("spatial_r", 12, 1)),
+    "sobel2d": (("hybrid_s", 3, 4), ("hybrid_s", 3, 4)),
+}
+
+
+def run():
+    rows = []
+    exact = {64: 0, 2: 0}
+    for name, pe in PAPER_PE.items():
+        for idx, it in enumerate((64, 2)):
+            shape = (9720, 32, 32) if name in stencils.BENCHMARKS_3D \
+                else (9720, 1024)
+            spec = stencils.get(name, shape=shape, iterations=it)
+            best = model.choose_best(spec, DEFAULT_FPGA,
+                                     pe_res_override=pe)[0]
+            got = (best.config.variant, best.config.k, best.config.s)
+            want = PAPER_TABLE3[name][idx]
+            exact[it] += got == want
+            rows.append(
+                f"table3/fpga/{name}/iter{it},{best.latency*1e6:.2f},"
+                f"got={got[0]}(k={got[1]}.s={got[2]});"
+                f"paper={want[0]}(k={want[1]}.s={want[2]});"
+                f"match={got == want}")
+            tbest = model.choose_best(spec, DEFAULT_TPU.with_chips(8))[0]
+            rows.append(
+                f"table3/tpu8/{name}/iter{it},{tbest.latency*1e6:.2f},"
+                f"variant={tbest.config.variant};k={tbest.config.k};"
+                f"s={tbest.config.s};bottleneck={tbest.bottleneck}")
+    rows.append(f"table3/summary,0.00,"
+                f"exact_match_iter64={exact[64]}/8;"
+                f"exact_match_iter2={exact[2]}/8;"
+                f"note=iter2 cells are <1pct analytic near-ties decided "
+                f"on-board by timing closure (Sec 5.3.6)")
+    return rows

@@ -1,0 +1,26 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_call(fn, *args, warmup=1, iters=3, **kw):
+    """Median wall-time of fn(*args) in seconds (blocks on jax arrays)."""
+    for _ in range(warmup):
+        r = fn(*args, **kw)
+        jax.block_until_ready(r)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args, **kw)
+        jax.block_until_ready(r)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(rows, name, us, derived=""):
+    rows.append(f"{name},{us:.2f},{derived}")
+    return rows

@@ -1,0 +1,47 @@
+"""Assigned-architecture roofline table (EXPERIMENTS.md §Roofline source).
+
+Reads dryrun_results.json (written by repro.launch.dryrun --all) and emits
+one row per (arch x shape x mesh) cell: the three roofline terms, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and fit status.  If the
+dry-run has not been executed yet, emits a pointer row instead of failing.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "dryrun_results.json")
+
+
+def run():
+    rows = []
+    if not os.path.exists(RESULTS):
+        rows.append(
+            "roofline/missing,0.00,"
+            "run 'PYTHONPATH=src python -m repro.launch.dryrun --all' first")
+        return rows
+    with open(RESULTS) as f:
+        results = json.load(f)
+    for key in sorted(results):
+        res = results[key]
+        arch, shape, mesh = key.split("|")
+        if res["status"] == "skipped":
+            rows.append(f"roofline/{arch}/{shape}/{mesh},0.00,"
+                        f"status=skipped;reason={res['reason'][:60]}")
+            continue
+        if res["status"] != "ok":
+            rows.append(f"roofline/{arch}/{shape}/{mesh},0.00,"
+                        f"status=FAILED;reason={res['reason'][:80]}")
+            continue
+        r = res["report"]
+        dominant = r["bottleneck"]
+        rows.append(
+            f"roofline/{arch}/{shape}/{mesh},"
+            f"{max(r['compute_term'], r['memory_term'], r['collective_term'])*1e6:.1f},"
+            f"compute_s={r['compute_term']:.4f};"
+            f"memory_s={r['memory_term']:.4f};"
+            f"collective_s={r['collective_term']:.4f};"
+            f"bottleneck={dominant};"
+            f"useful_flops={r['useful_flops_ratio']:.2f};"
+            f"fits={r['fits']}")
+    return rows

@@ -1,0 +1,141 @@
+"""Paper Fig. 9: analytical-model accuracy — predicted vs measured.
+
+The paper reports <5% error between Eqs. 4-9 and on-board U280 execution.
+Two validations stand in here (no U280/TPU on this container):
+
+1. *Against the paper's own published results*: the U280 cycle model
+   reproduces Table 3's best-parallelism picks (8/8 at iteration=64) and
+   the published SODA-speedup sweep within ~8% (avg 4.03x vs 3.74x) —
+   see best_config.py / speedup_vs_soda.py.
+
+2. *Against measured wall-clock on this host*: the same analytic
+   flop/byte counts drive a host cost model ``t = F/flops + B/bw + c``
+   whose three constants are least-squares-fitted on a CALIBRATION set of
+   kernels and validated on HELD-OUT kernels — the honest analogue of
+   calibrating the platform once and predicting unseen workloads.  A
+   dataflow FPGA is cycle-exact; an out-of-order CPU under an optimizing
+   compiler is not, so the bar here is usefulness for *ranking*, which is
+   what the auto-tuner needs.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import time_call
+from repro.configs import stencils
+from repro.kernels import ops
+
+SHAPE = (2048, 512)
+CALIBRATE_ON = ["jacobi2d", "blur", "heat3d", "hotspot", "dilate"]
+VALIDATE_ON = ["sobel2d", "seidel2d", "jacobi3d", "blur_jacobi2d"]
+POINTS = [(1, 1), (4, 1), (4, 4), (16, 4)]
+
+
+def _features(spec, iters, s):
+    """Analytic per-op-mix work vector for the fused executor: XLA CPU
+    costs adds/muls/divs/compares very differently, so the calibration
+    fits one throughput per op class plus a memory-traffic term."""
+    from repro.core.model import _op_mix
+    cells = float(np.prod(spec.shape))
+    mix = _op_mix(spec)
+    rounds = float(-(-iters // s))
+    bytes_ = (cells * spec.itemsize
+              * (spec.num_inputs + 1 + 2 * len(spec.stages)) * iters)
+    return np.array([
+        cells * iters * mix["add"],
+        cells * iters * mix["mul"],
+        cells * iters * mix["div"],
+        cells * iters * mix["cmp"],
+        bytes_,
+    ])
+
+
+def _measure(name, iters, s):
+    shape = (256, 32, 32) if name in stencils.BENCHMARKS_3D else SHAPE
+    spec = stencils.get(name, shape=shape, iterations=iters)
+    arrays = {n: jnp.ones(shp, dt) for n, (dt, shp) in spec.inputs.items()}
+    t = time_call(ops.stencil_run, spec, arrays, iters, s=s, backend="jnp")
+    return spec, t
+
+
+def run():
+    rows = []
+    X, y = [], []
+    for name in CALIBRATE_ON:
+        for iters, s in POINTS:
+            spec, t = _measure(name, iters, s)
+            X.append(_features(spec, iters, s))
+            y.append(t)
+    X, y = np.array(X), np.array(y)
+    # non-negative least squares via multiplicative updates (no scipy)
+    Xs = X / X.max(0)
+    coef = np.full(X.shape[1], 1e-3)
+    for _ in range(5000):
+        num = Xs.T @ y
+        den = Xs.T @ (Xs @ coef) + 1e-18
+        coef *= num / den
+    coef = coef / X.max(0)
+    insample = X @ coef
+    in_err = np.abs(insample - y) / y * 100
+    rows.append(
+        f"fig9/calibration,0.00,"
+        f"op_costs_ns={';'.join(f'{c*1e9:.3f}' for c in coef[:4])};"
+        f"eff_bw={1/max(coef[4],1e-18):.2e};"
+        f"in_sample_mean_err_pct={in_err.mean():.1f};"
+        f"fit_kernels={'+'.join(CALIBRATE_ON)}")
+
+    errs = []
+    rank_hits = 0
+    rank_total = 0
+    for name in VALIDATE_ON:
+        meas_by_pt = {}
+        for iters, s in POINTS:
+            spec, t = _measure(name, iters, s)
+            pred = float(_features(spec, iters, s) @ coef)
+            err = abs(pred - t) / t * 100
+            errs.append(err)
+            meas_by_pt[(iters, s)] = (t, pred)
+            rows.append(
+                f"fig9/accuracy/{name}/it{iters}_s{s},{t*1e6:.2f},"
+                f"predicted_us={pred*1e6:.2f};error_pct={err:.1f}")
+        # ranking usefulness: does the model order the points correctly?
+        pts = list(meas_by_pt.values())
+        for i in range(len(pts)):
+            for j in range(i + 1, len(pts)):
+                rank_total += 1
+                if (pts[i][0] < pts[j][0]) == (pts[i][1] < pts[j][1]):
+                    rank_hits += 1
+    rows.append(
+        f"fig9/summary,0.00,"
+        f"mean_error_pct={np.mean(errs):.1f};max_error_pct={np.max(errs):.1f};"
+        f"pairwise_rank_accuracy={rank_hits}/{rank_total};"
+        f"paper_fpga_error=under5pct(cycle-exact dataflow);"
+        f"fpga_model_vs_published=Table3 8of8 + speedups within ~8pct")
+
+    # --- paper-methodology variant: calibrate per design, predict the
+    # iteration/fusion scaling (the paper's tool flow synthesises each
+    # design, so per-design constants are known; Eqs. 4-8 then predict
+    # latency across iteration counts — that prediction is what carried
+    # the <5% claim).  One measurement at (iters=1, s=1) anchors each
+    # kernel; all other (iters, s) points are blind predictions. ---
+    errs2 = []
+    for name in CALIBRATE_ON + VALIDATE_ON:
+        spec1, t1 = _measure(name, 1, 1)
+        f1 = _features(spec1, 1, 1) @ coef
+        scale = t1 / max(f1, 1e-12)
+        for iters, s in POINTS[1:]:
+            spec, t = _measure(name, iters, s)
+            pred = float(_features(spec, iters, s) @ coef) * scale
+            err = abs(pred - t) / t * 100
+            errs2.append(err)
+            rows.append(
+                f"fig9/per_design/{name}/it{iters}_s{s},{t*1e6:.2f},"
+                f"predicted_us={pred*1e6:.2f};error_pct={err:.1f}")
+    rows.append(
+        f"fig9/per_design_summary,0.00,"
+        f"mean_error_pct={np.mean(errs2):.1f};"
+        f"median_error_pct={np.median(errs2):.1f};"
+        f"max_error_pct={np.max(errs2):.1f};"
+        f"methodology=calibrate-once-per-design predict-across-iterations")
+    return rows

@@ -1,0 +1,65 @@
+"""Paper Figs. 10-17: throughput (GCell/s) of each parallelism vs
+iteration count, per stencil kernel.
+
+Two layers of results per cell:
+  * model-projected GCell/s on the TPU-v5e 8-chip slice (the deployment
+    target this framework optimises for), and
+  * measured GCell/s for the single-device fused executor on this host
+    (temporal variants; spatial variants need the multi-device runner and
+    are exercised in tests/_multidevice_main.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import time_call
+from repro.configs import stencils
+from repro.core import model
+from repro.core.platform import DEFAULT_TPU
+from repro.kernels import ops
+
+BENCHES = ["jacobi2d", "jacobi3d", "blur", "seidel2d", "dilate", "hotspot",
+           "heat3d", "sobel2d"]
+ITERS = [1, 2, 4, 8, 16, 32, 64]
+
+
+def run(fast: bool = True):
+    rows = []
+    tpu = DEFAULT_TPU.with_chips(8)
+    for name in BENCHES:
+        shape = (9720, 32, 32) if name in stencils.BENCHMARKS_3D \
+            else (9720, 1024)
+        cells = float(np.prod(shape))
+        for it in ITERS:
+            spec = stencils.get(name, shape=shape, iterations=it)
+            for pred in model.choose_best(spec, tpu):
+                pass
+            cands = model.tpu_candidate_configs(spec, tpu)
+            best_per_variant = {}
+            for cfg in cands:
+                p = model.predict_tpu(spec, cfg, tpu)
+                cur = best_per_variant.get(cfg.variant)
+                if cur is None or p.latency < cur.latency:
+                    best_per_variant[cfg.variant] = p
+            for variant, p in sorted(best_per_variant.items()):
+                gcells = cells * it / p.latency / 1e9
+                rows.append(
+                    f"fig10-17/{name}/iter{it}/{variant},"
+                    f"{p.latency*1e6:.2f},"
+                    f"gcells_per_s={gcells:.2f};k={p.config.k};"
+                    f"s={p.config.s};bottleneck={p.bottleneck}")
+        # measured single-device fused execution (temporal path)
+        meas_shape = (486, 64) if name not in stencils.BENCHMARKS_3D \
+            else (243, 16, 16)
+        for it, s in [(4, 4), (16, 16)]:
+            spec = stencils.get(name, shape=meas_shape, iterations=it)
+            arrays = {n: jnp.ones(shp, dt) for n, (dt, shp)
+                      in spec.inputs.items()}
+            t = time_call(ops.stencil_run, spec, arrays, it, s=s,
+                          backend="jnp")
+            g = np.prod(meas_shape) * it / t / 1e9
+            rows.append(
+                f"fig10-17/measured/{name}/iter{it}_s{s},{t*1e6:.2f},"
+                f"gcells_per_s={g:.3f};shape={'x'.join(map(str, meas_shape))}")
+    return rows

@@ -1,0 +1,57 @@
+"""Fault-tolerance demo: train, crash mid-run, resume losslessly from the
+atomic checkpoint, then "elastically" restore the same checkpoint as if
+the surviving slice had a different topology.
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+import dataclasses
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint
+from repro.configs import base
+from repro.models.model_zoo import build_model
+from repro.train import TrainConfig, Trainer
+
+
+def main():
+    ckpt_dir = tempfile.mkdtemp(prefix="repro_elastic_")
+    cfg = base.get("granite_3_2b").reduced()
+    model = build_model(cfg)
+
+    print("=== phase 1: train with an injected failure at step 12 ===")
+    t1 = Trainer(model, TrainConfig(
+        steps=20, batch=4, seq=32, ckpt_dir=ckpt_dir, ckpt_every=5,
+        log_every=5, fail_at_step=12))
+    try:
+        t1.run()
+    except RuntimeError as e:
+        print(f"!! {e}")
+    print(f"latest durable checkpoint: step {latest_step(ckpt_dir)}")
+
+    print("\n=== phase 2: restart — auto-resume from the checkpoint ===")
+    t2 = Trainer(model, TrainConfig(
+        steps=20, batch=4, seq=32, ckpt_dir=ckpt_dir, ckpt_every=5,
+        log_every=5))
+    state, losses = t2.run()
+    print(f"resumed and finished at step {int(state['step'])}, "
+          f"final loss {losses[-1]:.4f}")
+
+    print("\n=== phase 3: elastic rescale — restore under a new topology ===")
+    # the checkpoint is topology-free; here we restore it for a 'smaller
+    # slice' (single device) and verify bitwise identity of the params
+    like = t2.init_state()
+    restored = restore_checkpoint(ckpt_dir, int(state["step"]), like)
+    same = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(state["params"]),
+                        jax.tree.leaves(restored["params"])))
+    print(f"params identical after reshard-restore: {same}")
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

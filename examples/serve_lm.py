@@ -1,0 +1,46 @@
+"""Batched serving example: prefill + KV-cache decode with the ServeEngine.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import base
+from repro.models.model_zoo import build_model
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    cfg = base.get("recurrentgemma_2b").reduced()  # hybrid: RG-LRU + local
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, batch_size=4, cache_len=96)
+
+    rng = np.random.default_rng(0)
+    requests = [
+        Request(prompt=rng.integers(1, cfg.vocab, size=n).astype(np.int32),
+                max_new_tokens=24)
+        for n in (12, 7, 19, 4)
+    ]
+    t0 = time.perf_counter()
+    outs = engine.generate(requests)
+    dt = time.perf_counter() - t0
+    total_new = sum(len(o) for o in outs)
+    print(f"arch={cfg.name}: generated {total_new} tokens for "
+          f"{len(requests)} requests in {dt:.2f}s "
+          f"({total_new / dt:.1f} tok/s incl. compile)")
+    for i, o in enumerate(outs):
+        print(f"  req{i} ({len(requests[i].prompt)} prompt toks) -> "
+              f"{o[:10].tolist()}{'...' if len(o) > 10 else ''}")
+
+    # steady-state decode throughput (cache warm, jit compiled)
+    t0 = time.perf_counter()
+    outs = engine.generate(requests)
+    dt = time.perf_counter() - t0
+    print(f"warm: {sum(len(o) for o in outs) / dt:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

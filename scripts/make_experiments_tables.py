@@ -1,0 +1,81 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the results
+JSONs (baseline: dryrun_results.json; hillclimb: hillclimb_results.json).
+"""
+import json
+import sys
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.1f}"
+
+
+def dryrun_table(results):
+    lines = [
+        "| arch | shape | mesh | status | compile s | args GiB | temps GiB | fits |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for k in sorted(results):
+        v = results[k]
+        arch, shape, mesh = k.split("|")[:3]
+        if v["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | {mesh} | skipped "
+                         f"(long-context needs sub-quadratic attention) "
+                         f"| — | — | — | — |")
+            continue
+        r = v["report"]
+        m = r["memory_per_chip"]
+        lines.append(
+            f"| {arch} | {shape} | {mesh} | {v['status']} "
+            f"| {v['seconds']:.0f} | {fmt_bytes(m['arguments'])} "
+            f"| {fmt_bytes(m['temps'])} | {r['fits']} |")
+    return "\n".join(lines)
+
+
+def roofline_table(results, hillclimb=None):
+    hillclimb = hillclimb or {}
+    lines = [
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "bottleneck | MODEL/HLO flops | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for k in sorted(results):
+        v = results[k]
+        if v["status"] != "ok":
+            continue
+        arch, shape, mesh = k.split("|")[:3]
+        r = v["report"]
+        note = ""
+        if k in hillclimb and hillclimb[k].get("status") == "ok":
+            h = hillclimb[k]["report"]
+            note = (f"**optimized**: {h['compute_term']:.2f}/"
+                    f"{h['memory_term']:.2f}/{h['collective_term']:.2f} s, "
+                    f"useful {h['useful_flops_ratio']:.2f}, "
+                    f"fits {h['fits']}")
+        lines.append(
+            f"| {arch} | {shape} | {mesh} | {r['compute_term']:.3f} "
+            f"| {r['memory_term']:.3f} | {r['collective_term']:.3f} "
+            f"| {r['bottleneck']} | {r['useful_flops_ratio']:.2f} "
+            f"| {note} |")
+    return "\n".join(lines)
+
+
+def main():
+    results = json.load(open("dryrun_results.json"))
+    try:
+        hc = json.load(open("hillclimb_results.json"))
+    except FileNotFoundError:
+        hc = {}
+    with open("EXPERIMENTS.md") as f:
+        doc = f.read()
+    doc = doc.replace("<!-- DRYRUN_TABLE -->", dryrun_table(results))
+    doc = doc.replace("<!-- ROOFLINE_TABLE -->", roofline_table(results, hc))
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(doc)
+    ok = sum(1 for v in results.values() if v["status"] == "ok")
+    sk = sum(1 for v in results.values() if v["status"] == "skipped")
+    print(f"tables written: {ok} ok, {sk} skipped, "
+          f"{len(results) - ok - sk} failed")
+
+
+if __name__ == "__main__":
+    main()

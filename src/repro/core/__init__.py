@@ -1,0 +1,10 @@
+"""SASA core: stencil DSL, analytical model, auto-tuned distributed execution."""
+from repro.core import dsl, model, platform
+from repro.core.autotune import TunedDesign, autotune, soda_baseline
+from repro.core.model import ParallelismConfig, Prediction, choose_best
+from repro.core.spec import StencilSpec
+
+__all__ = [
+    "dsl", "model", "platform", "autotune", "soda_baseline", "TunedDesign",
+    "ParallelismConfig", "Prediction", "choose_best", "StencilSpec",
+]

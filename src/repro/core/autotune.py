@@ -1,0 +1,112 @@
+"""SASA end-to-end automation flow (paper Sec. 4.3), TPU edition.
+
+  DSL text ──parse──► StencilSpec ──analytical model──► ranked configs
+      ──executor build──► jitted shard_map/Pallas runner (+ host driver)
+
+Mirrors the paper's five steps:
+  1. parse DSL, generate the single-PE (single-chip fused kernel) design;
+  2. estimate the resource bound — on TPU this is the VMEM fusion limit
+     (Eq. 1's analogue) and the chip count (Eq. 2's analogue);
+  3. rank parallelism configs with the analytical model (Eqs. 4-9);
+  4. emit the multi-PE program: a jit(shard_map(...)) with ppermute border
+     streaming / redundant-halo trapezoids and fused Pallas iteration tiles;
+  5. if a config is infeasible on the actual device pool (e.g. halo
+     constraint), fall back to the next-best candidate — the paper's
+     "build next best design" retry loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import jax
+
+from repro.core import dsl, model
+from repro.core.distribute import build_runner
+from repro.core.model import ParallelismConfig, Prediction
+from repro.core.platform import DEFAULT_TPU, TPUPlatform
+from repro.core.spec import StencilSpec
+
+
+@dataclasses.dataclass
+class TunedDesign:
+    spec: StencilSpec
+    prediction: Prediction
+    ranking: list[Prediction]
+    runner: object  # callable(arrays) -> np.ndarray
+
+    @property
+    def config(self) -> ParallelismConfig:
+        return self.prediction.config
+
+
+def autotune(
+    source_or_spec,
+    platform: TPUPlatform | None = None,
+    iterations: int | None = None,
+    devices=None,
+    build: bool = True,
+    tile_rows: int = 64,
+) -> TunedDesign:
+    """The SASA entry point: DSL text (or parsed spec) -> optimized runner."""
+    spec = (
+        source_or_spec
+        if isinstance(source_or_spec, StencilSpec)
+        else dsl.parse(source_or_spec)
+    )
+    if platform is None:
+        n_avail = len(devices) if devices is not None else len(jax.devices())
+        platform = DEFAULT_TPU.with_chips(n_avail)
+    elif build:
+        n_avail = len(devices) if devices is not None else len(jax.devices())
+        platform = platform.with_chips(min(platform.num_chips, n_avail))
+    ranking = model.choose_best(spec, platform, iterations=iterations)
+    last_err = None
+    for pred in ranking:
+        runner = None
+        if build:
+            try:
+                runner = build_runner(
+                    spec, pred.config, iterations=iterations,
+                    devices=devices, tile_rows=tile_rows,
+                )
+            except ValueError as e:  # infeasible on the actual pool: retry
+                last_err = e
+                continue
+        return TunedDesign(spec, pred, ranking, runner)
+    raise RuntimeError(f"no feasible configuration: {last_err}")
+
+
+def soda_baseline(
+    source_or_spec,
+    platform: TPUPlatform | None = None,
+    iterations: int | None = None,
+    devices=None,
+    build: bool = True,
+    tile_rows: int = 64,
+) -> TunedDesign:
+    """State-of-the-art baseline (SODA): temporal parallelism only.
+
+    The paper's Sec. 5.4 comparison point — identical single-PE design and
+    reuse optimisation, but the only multi-PE axis explored is temporal.
+    """
+    spec = (
+        source_or_spec
+        if isinstance(source_or_spec, StencilSpec)
+        else dsl.parse(source_or_spec)
+    )
+    if platform is None:
+        n_avail = len(devices) if devices is not None else len(jax.devices())
+        platform = DEFAULT_TPU.with_chips(n_avail)
+    it = spec.iterations if iterations is None else iterations
+    cands = [
+        p for p in model.choose_best(spec, platform, iterations=iterations)
+        if p.config.variant == "temporal"
+    ]
+    pred = cands[0]
+    runner = (
+        build_runner(spec, pred.config, iterations=iterations,
+                     devices=devices, tile_rows=tile_rows)
+        if build else None
+    )
+    return TunedDesign(spec, pred, cands, runner)

@@ -1,0 +1,350 @@
+"""Multi-device stencil execution: the five SASA parallelisms on a TPU mesh.
+
+FPGA -> TPU mapping (Sec. 3 of the paper re-derived for ICI-connected
+chips; DESIGN.md carries the full narrative):
+
+  temporal    cascaded PEs, tiles streamed PE->PE     cross-device software
+              through FIFOs, one HBM bank touched     pipeline: row tiles flow
+                                                      through a ppermute chain,
+                                                      device j applies iter j.
+  spatial_r   row partitions + redundant halo         one up-front ppermute of
+              compute, no inter-PE wires              iter*r rows, then local
+                                                      trapezoid, no further comm.
+  spatial_s   row partitions + border streaming       r-row ppermute halo
+              wires each iteration                    exchange each iteration.
+  hybrid_r    k spatial groups x s temporal stages,   up-front iter*r exchange,
+              no sync (growing trapezoids)            rounds of s fused
+                                                      (VMEM-blocked) iterations.
+  hybrid_s    k groups x s stages, first stage        s*r-row ppermute per round,
+              exchanges halo*s rows per round         rounds of s fused iters.
+
+Every runner is a jit(shard_map(...)) program over a 1-D ("sp",) device
+mesh, numerically equivalent to :func:`repro.kernels.ref.stencil_iterations_ref`
+(tests enforce this on 8 forced host devices).
+
+ppermute conveniently zero-fills non-participating edge devices, which is
+exactly the exterior-zero boundary the reference semantics prescribe.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from repro.core.model import ParallelismConfig
+from repro.core.spec import StencilSpec
+from repro.kernels.blockops import fused_iterations_on_block
+
+AXIS = "sp"
+
+
+# --------------------------------------------------------------------------
+# Halo exchange primitives (the "border streaming" wires)
+# --------------------------------------------------------------------------
+
+
+def exchange_halo(local: jnp.ndarray, h: int, axis: str = AXIS):
+    """Return (up_halo, down_halo): h rows from the previous / next device.
+
+    Edge devices receive zeros (exterior-zero boundary for the global grid;
+    padded-row shards are additionally handled by the grid mask).
+    """
+    k = lax.axis_size(axis)
+    if k == 1 or h == 0:
+        zeros = jnp.zeros((h,) + local.shape[1:], local.dtype)
+        return zeros, zeros
+    down_perm = [(i, i + 1) for i in range(k - 1)]   # my bottom rows -> next
+    up_perm = [(i, i - 1) for i in range(1, k)]      # my top rows -> previous
+    up_halo = lax.ppermute(local[-h:], axis, down_perm)   # from device i-1
+    down_halo = lax.ppermute(local[:h], axis, up_perm)    # from device i+1
+    return up_halo, down_halo
+
+
+def _extend(local, h, axis=AXIS):
+    up, down = exchange_halo(local, h, axis)
+    return jnp.concatenate([up, local, down], axis=0)
+
+
+# --------------------------------------------------------------------------
+# shard_map local programs
+# --------------------------------------------------------------------------
+
+
+def _local_rows(R_pad: int, k: int) -> int:
+    return R_pad // k
+
+
+def _spatial_s_local(spec, iterations, grid_shape, R_k):
+    r = spec.radius
+    col0 = (0,) * (spec.ndim - 1)
+
+    def fn(arrays: dict):
+        idx = lax.axis_index(AXIS)
+        row0 = idx * R_k - r
+        consts = {
+            n: _extend(a, r) for n, a in arrays.items()
+            if n != spec.iterate_input
+        }
+        cur = arrays[spec.iterate_input]
+        for _ in range(iterations):
+            ext = dict(consts)
+            ext[spec.iterate_input] = _extend(cur, r)
+            out = fused_iterations_on_block(
+                spec, ext, 1, row0, grid_shape, col0
+            )
+            cur = out[r:r + R_k]
+        return cur
+
+    return fn
+
+
+def _spatial_r_local(spec, iterations, grid_shape, R_k):
+    r = spec.radius
+    H = min(iterations * r, R_k)
+    col0 = (0,) * (spec.ndim - 1)
+
+    def fn(arrays: dict):
+        idx = lax.axis_index(AXIS)
+        row0 = idx * R_k - H
+        ext = {n: _extend(a, H) for n, a in arrays.items()}
+        cur = ext[spec.iterate_input]
+        # one HBM round trip per iteration (faithful Spatial_R: the fused
+        # trapezoid depth is 1; the halo just shrinks by r per iteration)
+        for _ in range(iterations):
+            ext[spec.iterate_input] = cur
+            cur = fused_iterations_on_block(spec, ext, 1, row0, grid_shape, col0)
+        return cur[H:H + R_k]
+
+    return fn
+
+
+def _hybrid_local(spec, iterations, grid_shape, R_k, s, streaming: bool):
+    """hybrid_s (streaming=True): exchange s*r rows per round.
+    hybrid_r (streaming=False): exchange iter*r rows once, then rounds."""
+    r = spec.radius
+    col0 = (0,) * (spec.ndim - 1)
+    rounds = math.ceil(iterations / s)
+
+    def fn(arrays: dict):
+        idx = lax.axis_index(AXIS)
+        if streaming:
+            consts = {
+                n: a for n, a in arrays.items() if n != spec.iterate_input
+            }
+            cur = arrays[spec.iterate_input]
+            left = iterations
+            while left > 0:
+                step = min(s, left)
+                h = step * r
+                row0 = idx * R_k - h
+                ext = {n: _extend(a, h) for n, a in consts.items()}
+                ext[spec.iterate_input] = _extend(cur, h)
+                out = fused_iterations_on_block(
+                    spec, ext, step, row0, grid_shape, col0
+                )
+                cur = out[h:h + R_k]
+                left -= step
+            return cur
+        # hybrid_r: single up-front exchange of the full run's halo
+        H = min(iterations * r, R_k)
+        row0 = idx * R_k - H
+        ext = {n: _extend(a, H) for n, a in arrays.items()}
+        cur = ext[spec.iterate_input]
+        left = iterations
+        while left > 0:
+            step = min(s, left)
+            ext[spec.iterate_input] = cur
+            cur = fused_iterations_on_block(
+                spec, ext, step, row0, grid_shape, col0
+            )
+            left -= step
+        return cur[H:H + R_k]
+
+    return fn
+
+
+def _temporal_pipeline_local(spec, iterations, grid_shape, tile_rows, k):
+    """SODA-analogue temporal pipeline: row tiles stream through the device
+    chain, device j applies stencil iteration j of the current round.
+
+    Per round of up-to-k iterations, the loop runs T + k - 1 steps (the
+    paper's d*(s_t-1) pipeline-fill delay, Eq. 4).  Input is replicated
+    (one logical HBM, as on the FPGA where temporal designs touch a single
+    bank); device k-1 materialises the output, which is then broadcast.
+    """
+    r = spec.radius
+    h = k * r
+    R = grid_shape[0]
+    T = math.ceil(R / tile_rows)
+    R_pad = T * tile_rows
+    col0 = (0,) * (spec.ndim - 1)
+    rounds = math.ceil(iterations / k)
+
+    def one_round(arrays, active):
+        """active: number of live stages this round (idle PEs pass through)."""
+        j = lax.axis_index(AXIS)
+        cur_global = arrays[spec.iterate_input]  # replicated (R_pad, C...)
+        consts = {n: a for n, a in arrays.items() if n != spec.iterate_input}
+        padded = jnp.pad(
+            cur_global, [(h, h)] + [(0, 0)] * (spec.ndim - 1)
+        )
+        consts_padded = {
+            n: jnp.pad(a, [(h, h)] + [(0, 0)] * (spec.ndim - 1))
+            for n, a in consts.items()
+        }
+        tile_shape = (tile_rows + 2 * h,) + tuple(cur_global.shape[1:])
+        # carries become device-varying after the first ppermute; mark the
+        # initial zeros as varying so the fori_loop carry types match
+        out0 = lax.pcast(jnp.zeros_like(cur_global), (AXIS,), to="varying")
+        buf0 = lax.pcast(
+            jnp.zeros(tile_shape, cur_global.dtype), (AXIS,), to="varying"
+        )
+
+        def step(n, state):
+            buf, out = state
+            tile_idx = n - j
+            safe_idx = jnp.clip(tile_idx, 0, T - 1)
+            start = (safe_idx * tile_rows,) + (0,) * (spec.ndim - 1)
+            loaded = lax.dynamic_slice(padded, start, tile_shape)
+            # stage 0 ingests from "HBM"; later stages use the pipelined buf
+            buf = jnp.where(j == 0, loaded, buf)
+            const_tiles = {
+                n: lax.dynamic_slice(a, start, tile_shape)
+                for n, a in consts_padded.items()
+            }
+            row0 = safe_idx * tile_rows - h
+            env = dict(const_tiles)
+            env[spec.iterate_input] = buf
+            applied = fused_iterations_on_block(
+                spec, env, 1, row0, grid_shape, col0
+            )
+            applied = jnp.where(j < active, applied, buf)  # idle stage
+            # last live stage commits the tile's valid center to the output
+            center = lax.dynamic_slice(
+                applied, (h,) + (0,) * (spec.ndim - 1),
+                (tile_rows,) + tuple(cur_global.shape[1:]),
+            )
+            valid = (tile_idx >= 0) & (tile_idx < T) & (j == active - 1)
+            prev = lax.dynamic_slice(out, start[:1] + (0,) * (spec.ndim - 1),
+                                     center.shape)
+            out = lax.dynamic_update_slice(
+                out, jnp.where(valid, center, prev),
+                (safe_idx * tile_rows,) + (0,) * (spec.ndim - 1),
+            )
+            # stream the tile to the next stage
+            k_ = lax.axis_size(AXIS)
+            if k_ > 1:
+                buf = lax.ppermute(
+                    applied, AXIS, [(i, i + 1) for i in range(k_ - 1)]
+                )
+            else:
+                buf = applied
+            return buf, out
+
+        _, out = lax.fori_loop(0, T + k - 1, step, (buf0, out0))
+        # only the last live stage holds real output rows; broadcast it
+        contrib = jnp.where(j == active - 1, out, jnp.zeros_like(out))
+        return lax.psum(contrib, AXIS)
+
+    def fn(arrays: dict):
+        cur = arrays[spec.iterate_input]
+        left = iterations
+        env = dict(arrays)
+        while left > 0:
+            active = min(k, left)
+            env[spec.iterate_input] = cur
+            cur = one_round(env, active)
+            left -= active
+        return cur
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# Public runner builder
+# --------------------------------------------------------------------------
+
+
+def build_runner(
+    spec: StencilSpec,
+    cfg: ParallelismConfig,
+    iterations: int | None = None,
+    devices=None,
+    tile_rows: int = 64,
+):
+    """Build a jitted multi-device runner for a parallelism configuration.
+
+    Returns ``(run, mesh)`` where ``run(arrays_host) -> np.ndarray`` places
+    inputs with the configuration's sharding, executes, and gathers.
+    """
+    it = spec.iterations if iterations is None else iterations
+    n_dev = max(cfg.s, 1) if cfg.variant == "temporal" else max(cfg.k, 1)
+    if devices is None:
+        devices = jax.devices()[:n_dev]
+    k = len(devices)
+    mesh = Mesh(np.array(devices), (AXIS,))
+    R = spec.rows
+    grid_shape = spec.shape
+
+    if cfg.variant == "temporal":
+        R_pad = math.ceil(R / tile_rows) * tile_rows
+        local = _temporal_pipeline_local(
+            spec, it, grid_shape, tile_rows, k
+        )
+        in_spec = P()   # replicated: one logical HBM bank
+        out_spec = P()
+    else:
+        R_pad = math.ceil(R / k) * k
+        R_k = R_pad // k
+        if cfg.variant in ("spatial_r", "hybrid_r") and it * spec.radius > R_k:
+            raise ValueError(
+                f"{cfg.variant} needs iter*r <= rows/device "
+                f"({it}*{spec.radius} > {R_k}); the auto-tuner excludes "
+                "such configs (halo would span multiple neighbours)"
+            )
+        if cfg.variant == "spatial_s":
+            local = _spatial_s_local(spec, it, grid_shape, R_k)
+        elif cfg.variant == "spatial_r":
+            local = _spatial_r_local(spec, it, grid_shape, R_k)
+        elif cfg.variant == "hybrid_s":
+            local = _hybrid_local(spec, it, grid_shape, R_k, max(cfg.s, 1), True)
+        elif cfg.variant == "hybrid_r":
+            local = _hybrid_local(spec, it, grid_shape, R_k, max(cfg.s, 1), False)
+        else:
+            raise ValueError(cfg.variant)
+        in_spec = P(AXIS)
+        out_spec = P(AXIS)
+
+    names = list(spec.inputs)
+
+    @jax.jit
+    def sharded_fn(arrays: dict):
+        return shard_map(
+            local, mesh=mesh,
+            in_specs=({n: in_spec for n in names},),
+            out_specs=out_spec,
+        )(arrays)
+
+    def run(arrays_host: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
+        padded = {}
+        for n in names:
+            a = jnp.asarray(arrays_host[n])
+            if R_pad != R:
+                a = jnp.pad(a, [(0, R_pad - R)] + [(0, 0)] * (spec.ndim - 1))
+            padded[n] = jax.device_put(
+                a, NamedSharding(mesh, in_spec)
+            )
+        out = sharded_fn(padded)
+        return np.asarray(out)[:R]
+
+    run.mesh = mesh
+    run.sharded_fn = sharded_fn
+    run.R_pad = R_pad
+    return run

@@ -1,0 +1,232 @@
+"""SASA stencil DSL parser (Section 4.1 of the paper).
+
+Grammar (line oriented, ``#`` comments allowed)::
+
+    kernel: NAME
+    iteration: INT
+    iterate: NAME                      # optional; default = last input
+    input TYPE: NAME(INT, INT[, INT])
+    local TYPE: NAME(off, off[, off]) = EXPR
+    output TYPE: NAME(off, off[, off]) = EXPR
+
+Expressions support ``+ - * /``, unary minus, parentheses, numeric literals,
+array references ``name(o0, o1[, o2])`` with constant integer offsets, and
+the intrinsics ``max(...)``, ``min(...)``, ``abs(...)`` (needed for e.g.
+DILATE which is pure compare-select logic).
+
+The reference SASA implementation uses textX; we use a small hand-rolled
+recursive-descent parser to stay dependency-free.
+"""
+from __future__ import annotations
+
+import re
+
+from repro.core.spec import BinOp, Call, Expr, INTRINSICS, Neg, Num, Ref, Stage, StencilSpec
+
+_TOKEN_RE = re.compile(
+    r"\s*(?:(?P<num>\d+\.\d*(?:[eE][+-]?\d+)?|\.\d+(?:[eE][+-]?\d+)?|\d+(?:[eE][+-]?\d+)?)"
+    r"|(?P<name>[A-Za-z_][A-Za-z_0-9]*)"
+    r"|(?P<op>[-+*/(),]))"
+)
+
+
+class _ExprParser:
+    def __init__(self, text: str):
+        self.tokens: list[tuple[str, str]] = []
+        pos = 0
+        while pos < len(text):
+            if text[pos:].strip() == "":
+                break
+            m = _TOKEN_RE.match(text, pos)
+            if not m:
+                raise SyntaxError(f"bad token at: {text[pos:]!r}")
+            pos = m.end()
+            for kind in ("num", "name", "op"):
+                if m.group(kind) is not None:
+                    self.tokens.append((kind, m.group(kind)))
+                    break
+        self.i = 0
+
+    def peek(self):
+        return self.tokens[self.i] if self.i < len(self.tokens) else (None, None)
+
+    def next(self):
+        tok = self.peek()
+        self.i += 1
+        return tok
+
+    def expect(self, value: str):
+        kind, val = self.next()
+        if val != value:
+            raise SyntaxError(f"expected {value!r}, got {val!r}")
+
+    # expr := term (('+'|'-') term)*
+    def parse_expr(self) -> Expr:
+        node = self.parse_term()
+        while self.peek()[1] in ("+", "-"):
+            _, op = self.next()
+            node = BinOp(op, node, self.parse_term())
+        return node
+
+    # term := factor (('*'|'/') factor)*
+    def parse_term(self) -> Expr:
+        node = self.parse_factor()
+        while self.peek()[1] in ("*", "/"):
+            _, op = self.next()
+            node = BinOp(op, node, self.parse_factor())
+        return node
+
+    def parse_factor(self) -> Expr:
+        kind, val = self.next()
+        if val == "-":
+            return Neg(self.parse_factor())
+        if val == "+":
+            return self.parse_factor()
+        if kind == "num":
+            return Num(float(val))
+        if val == "(":
+            node = self.parse_expr()
+            self.expect(")")
+            return node
+        if kind == "name":
+            self.expect("(")
+            if val in INTRINSICS:
+                args = [self.parse_expr()]
+                while self.peek()[1] == ",":
+                    self.next()
+                    args.append(self.parse_expr())
+                self.expect(")")
+                return Call(val, tuple(args))
+            # array reference with constant signed-integer offsets
+            offsets = [self._parse_offset()]
+            while self.peek()[1] == ",":
+                self.next()
+                offsets.append(self._parse_offset())
+            self.expect(")")
+            return Ref(val, tuple(offsets))
+        raise SyntaxError(f"unexpected token {val!r}")
+
+    def _parse_offset(self) -> int:
+        sign = 1
+        kind, val = self.next()
+        while val in ("-", "+"):
+            if val == "-":
+                sign = -sign
+            kind, val = self.next()
+        if kind != "num" or "." in val or "e" in val or "E" in val:
+            raise SyntaxError(f"offset must be an integer, got {val!r}")
+        return sign * int(val)
+
+    def finish(self):
+        if self.i != len(self.tokens):
+            raise SyntaxError(f"trailing tokens: {self.tokens[self.i:]}")
+
+
+_HEADER_RE = re.compile(
+    r"^(?P<kw>kernel|iteration|iterate)\s*:\s*(?P<val>.+)$"
+)
+_DECL_RE = re.compile(
+    r"^(?P<kw>input|local|output)\s+(?P<dtype>[A-Za-z_0-9]+)\s*:\s*"
+    r"(?P<name>[A-Za-z_][A-Za-z_0-9]*)\s*\((?P<args>[^)]*)\)\s*"
+    r"(?:=\s*(?P<expr>.*))?$"
+)
+
+_DTYPES = {
+    "float": "float32",
+    "float32": "float32",
+    "double": "float64",
+    "float64": "float64",
+    "int": "int32",
+    "int32": "int32",
+    "uint16": "uint16",
+    "bfloat16": "bfloat16",
+}
+
+
+def parse(text: str) -> StencilSpec:
+    """Parse SASA DSL text into a validated :class:`StencilSpec`."""
+    name = None
+    iterations = 1
+    iterate = None
+    inputs: dict[str, tuple[str, tuple[int, ...]]] = {}
+    stages: list[Stage] = []
+
+    # join continuation lines: a line that is a continuation starts with an
+    # operator or the previous line ends with one / has unbalanced parens
+    logical_lines: list[str] = []
+    for raw in text.splitlines():
+        line = raw.split("#", 1)[0].rstrip()
+        if not line.strip():
+            continue
+        if logical_lines and (
+            logical_lines[-1].count("(") != logical_lines[-1].count(")")
+            or logical_lines[-1].rstrip().endswith(("+", "-", "*", "/", "=", "("))
+            or line.lstrip().startswith(("+", "-", "*", "/", ")"))
+        ):
+            logical_lines[-1] += " " + line.strip()
+        else:
+            logical_lines.append(line.strip())
+
+    for line in logical_lines:
+        m = _HEADER_RE.match(line)
+        if m:
+            kw, val = m.group("kw"), m.group("val").strip()
+            if kw == "kernel":
+                name = val
+            elif kw == "iteration":
+                iterations = int(val)
+            else:
+                iterate = val
+            continue
+        m = _DECL_RE.match(line)
+        if not m:
+            raise SyntaxError(f"cannot parse line: {line!r}")
+        kw = m.group("kw")
+        dtype = _DTYPES.get(m.group("dtype"))
+        if dtype is None:
+            raise SyntaxError(f"unsupported dtype {m.group('dtype')!r}")
+        arr = m.group("name")
+        args = [a.strip() for a in m.group("args").split(",") if a.strip()]
+        if kw == "input":
+            if m.group("expr"):
+                raise SyntaxError("input declarations cannot have an '='")
+            shape = tuple(int(a) for a in args)
+            inputs[arr] = (dtype, shape)
+        else:
+            if not m.group("expr"):
+                raise SyntaxError(f"{kw} declaration needs an '=' expression")
+            if inputs:
+                ndim = len(next(iter(inputs.values()))[1])
+                if len(args) != ndim:
+                    raise SyntaxError(
+                        f"{kw} {arr!r} declares {len(args)} offsets for a "
+                        f"{ndim}-D stencil"
+                    )
+            parser = _ExprParser(m.group("expr"))
+            expr = parser.parse_expr()
+            parser.finish()
+            stages.append(Stage(arr, dtype, expr, is_output=(kw == "output")))
+
+    if name is None:
+        raise SyntaxError("missing 'kernel:' line")
+    if not inputs:
+        raise SyntaxError("missing 'input' declaration")
+    if not stages:
+        raise SyntaxError("missing 'output' declaration")
+    # output stage must come last; locals keep declaration order
+    outputs = [s for s in stages if s.is_output]
+    if len(outputs) != 1:
+        raise SyntaxError("exactly one output stage is required")
+    stages = [s for s in stages if not s.is_output] + outputs
+    if iterate is None:
+        iterate = list(inputs)[-1]
+
+    spec = StencilSpec(
+        name=name,
+        iterations=iterations,
+        inputs=inputs,
+        stages=tuple(stages),
+        iterate_input=iterate,
+    )
+    spec.validate()
+    return spec

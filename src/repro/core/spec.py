@@ -1,0 +1,286 @@
+"""Stencil specification AST and derived static properties.
+
+This is the in-memory representation produced by :mod:`repro.core.dsl` and
+consumed by the reference executor, the Pallas kernel generator, the
+distribution layer, and the analytical performance model.
+
+Semantics (shared by every executor in the framework):
+  * An iteration applies every stage (``local`` stages in declaration order,
+    then the ``output`` stage) over the full grid.
+  * Cells outside the grid read as zero ("exterior-zero" boundary), at every
+    iteration.  This matches the behaviour of a streaming FPGA design whose
+    line buffers are zero-initialised and is linear-friendly for testing.
+  * Between iterations the designated ``iterate`` input is rebound to the
+    previous output (ping-pong buffering, Section 2.1 of the SASA paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Mapping, Sequence, Union
+
+import numpy as np
+
+# --------------------------------------------------------------------------
+# Expression AST
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Num:
+    value: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Ref:
+    """Reference to array ``name`` at a constant offset from the output cell."""
+
+    name: str
+    offsets: tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class BinOp:
+    op: str  # '+', '-', '*', '/'
+    lhs: "Expr"
+    rhs: "Expr"
+
+
+@dataclasses.dataclass(frozen=True)
+class Call:
+    """Intrinsic function call: max/min/abs over expressions."""
+
+    fn: str
+    args: tuple["Expr", ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Neg:
+    arg: "Expr"
+
+
+Expr = Union[Num, Ref, BinOp, Call, Neg]
+
+INTRINSICS = ("max", "min", "abs")
+
+
+def walk(expr: Expr):
+    """Yield every node of the expression tree."""
+    yield expr
+    if isinstance(expr, BinOp):
+        yield from walk(expr.lhs)
+        yield from walk(expr.rhs)
+    elif isinstance(expr, Call):
+        for a in expr.args:
+            yield from walk(a)
+    elif isinstance(expr, Neg):
+        yield from walk(expr.arg)
+
+
+def refs_in(expr: Expr) -> list[Ref]:
+    return [n for n in walk(expr) if isinstance(n, Ref)]
+
+
+def count_ops(expr: Expr) -> int:
+    """Number of algorithmic operations (paper's OPs metric, Fig. 1)."""
+    ops = 0
+    for node in walk(expr):
+        if isinstance(node, BinOp):
+            ops += 1
+        elif isinstance(node, Call):
+            # an n-ary max/min is n-1 compare-select ops
+            ops += max(len(node.args) - 1, 1)
+        elif isinstance(node, Neg):
+            ops += 1
+    return ops
+
+
+# --------------------------------------------------------------------------
+# Stages and the full spec
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One stencil loop: writes array ``name`` from the expression."""
+
+    name: str
+    dtype: str
+    expr: Expr
+    is_output: bool
+
+    @property
+    def radius(self) -> int:
+        """Chebyshev radius (paper's ``r``): max |offset| over any dim."""
+        rad = 0
+        for ref in refs_in(self.expr):
+            for o in ref.offsets:
+                rad = max(rad, abs(int(o)))
+        return rad
+
+    @property
+    def ops_per_cell(self) -> int:
+        return count_ops(self.expr)
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilSpec:
+    name: str
+    iterations: int
+    inputs: Mapping[str, tuple[str, tuple[int, ...]]]  # name -> (dtype, shape)
+    stages: tuple[Stage, ...]
+    iterate_input: str  # input rebound to the output between iterations
+
+    def __hash__(self):
+        # specs are jit static args; normalise the inputs mapping
+        return hash((
+            self.name,
+            self.iterations,
+            tuple((k, v[0], tuple(v[1])) for k, v in self.inputs.items()),
+            self.stages,
+            self.iterate_input,
+        ))
+
+    # ---------------- derived static properties ----------------
+    @property
+    def ndim(self) -> int:
+        return len(next(iter(self.inputs.values()))[1])
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(next(iter(self.inputs.values()))[1])
+
+    @property
+    def rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def cols_flat(self) -> int:
+        """Paper flattens all dims except the first into 'columns' (Sec 4.3)."""
+        return int(np.prod(self.shape[1:]))
+
+    @property
+    def output_stage(self) -> Stage:
+        return self.stages[-1]
+
+    @property
+    def output_name(self) -> str:
+        return self.output_stage.name
+
+    @property
+    def local_stages(self) -> tuple[Stage, ...]:
+        return tuple(s for s in self.stages if not s.is_output)
+
+    @property
+    def radius(self) -> int:
+        """Composite per-iteration radius: stage radii accumulate."""
+        return sum(s.radius for s in self.stages)
+
+    @property
+    def halo(self) -> int:
+        """Paper's halo/delay per iteration: ``halo = d = 2*r`` (Table 2)."""
+        return 2 * self.radius
+
+    @property
+    def ops_per_cell(self) -> int:
+        return sum(s.ops_per_cell for s in self.stages)
+
+    @property
+    def points(self) -> int:
+        """Number of distinct taps of the composite stencil (for reporting)."""
+        return sum(len(set(refs_in(s.expr))) for s in self.stages)
+
+    @property
+    def dtype(self) -> str:
+        return self.output_stage.dtype
+
+    @property
+    def itemsize(self) -> int:
+        return np.dtype(self.dtype).itemsize
+
+    @property
+    def num_inputs(self) -> int:
+        return len(self.inputs)
+
+    @property
+    def cells(self) -> int:
+        return int(np.prod(self.shape))
+
+    def computation_intensity(self, iterations: int | None = None) -> float:
+        """OPs per byte of off-chip traffic assuming optimal reuse (Fig. 1).
+
+        With optimal reuse each input is read once and the output written
+        once for the whole iterative run, while compute scales with ``iter``.
+        """
+        it = self.iterations if iterations is None else iterations
+        ops = self.ops_per_cell * self.cells * it
+        bytes_moved = (self.num_inputs + 1) * self.cells * self.itemsize
+        return ops / bytes_moved
+
+    def validate(self) -> None:
+        shapes = {tuple(shape) for _, shape in self.inputs.values()}
+        if len(shapes) != 1:
+            raise ValueError(f"all inputs must share a shape, got {shapes}")
+        if self.iterate_input not in self.inputs:
+            raise ValueError(
+                f"iterate input {self.iterate_input!r} is not an input"
+            )
+        known = set(self.inputs)
+        for stage in self.stages:
+            for ref in refs_in(stage.expr):
+                if ref.name not in known:
+                    raise ValueError(
+                        f"stage {stage.name!r} references unknown array "
+                        f"{ref.name!r}"
+                    )
+                if len(ref.offsets) != self.ndim:
+                    raise ValueError(
+                        f"ref {ref.name}{ref.offsets} has wrong arity for "
+                        f"{self.ndim}-D stencil"
+                    )
+            known.add(stage.name)
+        if not self.stages or not self.stages[-1].is_output:
+            raise ValueError("last stage must be the output stage")
+
+
+# --------------------------------------------------------------------------
+# Expression evaluation (shared by reference executor and kernels)
+# --------------------------------------------------------------------------
+
+
+def eval_expr(expr: Expr, get_ref: Callable[[str, tuple[int, ...]], "object"]):
+    """Evaluate an expression tree.
+
+    ``get_ref(name, offsets)`` must return an array (any numpy-like) holding
+    the referenced array shifted by ``offsets``; all returned arrays must
+    share a shape.  Scalars broadcast.
+    """
+    if isinstance(expr, Num):
+        return expr.value
+    if isinstance(expr, Ref):
+        return get_ref(expr.name, expr.offsets)
+    if isinstance(expr, Neg):
+        return -eval_expr(expr.arg, get_ref)
+    if isinstance(expr, BinOp):
+        lhs = eval_expr(expr.lhs, get_ref)
+        rhs = eval_expr(expr.rhs, get_ref)
+        if expr.op == "+":
+            return lhs + rhs
+        if expr.op == "-":
+            return lhs - rhs
+        if expr.op == "*":
+            return lhs * rhs
+        if expr.op == "/":
+            return lhs / rhs
+        raise ValueError(f"unknown op {expr.op!r}")
+    if isinstance(expr, Call):
+        import jax.numpy as jnp
+
+        args = [eval_expr(a, get_ref) for a in expr.args]
+        if expr.fn == "abs":
+            return jnp.abs(args[0])
+        acc = args[0]
+        for a in args[1:]:
+            acc = jnp.maximum(acc, a) if expr.fn == "max" else jnp.minimum(acc, a)
+        return acc
+    raise TypeError(f"unknown expression node {expr!r}")

@@ -1,0 +1,73 @@
+"""Pure-jnp oracle for stencil execution (exact exterior-zero semantics).
+
+Every other executor in the framework (Pallas kernels, shard_map spatial /
+hybrid / temporal-pipeline distributions) must agree with this module
+bit-for-bit up to float associativity.
+"""
+from __future__ import annotations
+
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spec import Stage, StencilSpec, eval_expr
+
+
+def _shifted(padded: jnp.ndarray, offsets, radius: int, shape) -> jnp.ndarray:
+    """View of ``padded`` shifted by ``offsets`` with the original shape."""
+    idx = tuple(
+        slice(radius + o, radius + o + s) for o, s in zip(offsets, shape)
+    )
+    return padded[idx]
+
+
+def apply_stage(
+    stage: Stage, arrays: Mapping[str, jnp.ndarray]
+) -> jnp.ndarray:
+    """Apply one stencil stage over the full grid with exterior-zero."""
+    shape = next(iter(arrays.values())).shape
+    r = stage.radius
+    padded = {
+        name: jnp.pad(a, [(r, r)] * a.ndim) for name, a in arrays.items()
+    }
+
+    def get_ref(name, offsets):
+        return _shifted(padded[name], offsets, r, shape)
+
+    out = eval_expr(stage.expr, get_ref)
+    return out.astype(stage.dtype)
+
+
+def stencil_step_ref(
+    spec: StencilSpec, arrays: Mapping[str, jnp.ndarray]
+) -> jnp.ndarray:
+    """One full iteration (all local stages + output stage)."""
+    env = dict(arrays)
+    for stage in spec.stages:
+        env[stage.name] = apply_stage(stage, env)
+    return env[spec.output_name]
+
+
+def stencil_iterations_ref(
+    spec: StencilSpec,
+    arrays: Mapping[str, jnp.ndarray],
+    iterations: int | None = None,
+) -> jnp.ndarray:
+    """Run ``iterations`` ping-pong iterations (Section 2.1)."""
+    it = spec.iterations if iterations is None else iterations
+    env = dict(arrays)
+    out = env[spec.iterate_input]
+    for _ in range(it):
+        out = stencil_step_ref(spec, env)
+        env[spec.iterate_input] = out
+    return out
+
+
+def stencil_run_ref_jit(spec: StencilSpec, iterations: int):
+    """Jitted closure over the spec: arrays dict -> output array."""
+
+    def run(arrays):
+        return stencil_iterations_ref(spec, arrays, iterations)
+
+    return jax.jit(run)

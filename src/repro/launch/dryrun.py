@@ -1,0 +1,368 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+# The dry-run (and only the dry-run) builds the 512-chip production mesh on
+# CPU placeholder devices; tests/benches import other modules and see 1.
+if os.environ.get("REPRO_DRYRUN_DEVICES"):  # test hook (set before import)
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count="
+        + os.environ["REPRO_DRYRUN_DEVICES"])
+
+# Multi-pod dry-run: lower + compile every (architecture x input-shape x
+# mesh) cell; record memory analysis, cost analysis, and the collective
+# schedule for the roofline table (EXPERIMENTS.md §Dry-run / §Roofline).
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch granite_3_8b \
+#       --shape train_4k [--multi-pod]
+#   PYTHONPATH=src python -m repro.launch.dryrun --all  # every cell, cached
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import base as config_base
+from repro.data.pipeline import make_batch_specs
+from repro.launch import sharding as shlib
+from repro.launch.mesh import batch_axes, make_production_mesh
+from repro.models import transformer as T
+from repro.models.model_zoo import build_model
+from repro.optim import make_optimizer
+from repro.roofline import roofline_from_compiled
+
+SHAPES = {
+    # name: (seq_len, global_batch, kind)
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+RESULTS_PATH = "dryrun_results.json"
+
+
+def applicable(cfg, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention arch: 500k decode KV would be "
+                       "quadratic-prefill-gated; skipped per DESIGN.md "
+                       "§Arch-applicability")
+    return True, ""
+
+
+def input_specs(cfg, shape_name: str, mesh):
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    seq, gbatch, kind = SHAPES[shape_name]
+    ba = batch_axes(mesh)
+    if kind == "train":
+        specs = make_batch_specs(cfg, gbatch, seq, batch_axes=ba)
+        structs = {k: v[0] for k, v in specs.items()}
+        shardings = {k: NamedSharding(
+            mesh, shlib.guard_spec(v[0].shape, v[1], mesh))
+            for k, v in specs.items()}
+        return structs, shardings
+    if kind == "prefill":
+        specs = make_batch_specs(cfg, gbatch, seq, batch_axes=ba)
+        structs = {k: v[0] for k, v in specs.items()
+                   if k != "labels"}
+        shardings = {k: NamedSharding(
+            mesh, shlib.guard_spec(specs[k][0].shape, specs[k][1], mesh))
+            for k in structs}
+        return structs, shardings
+    # decode: one new token against a seq-length cache
+    structs = {
+        "tokens": jax.ShapeDtypeStruct((gbatch, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((gbatch,), jnp.int32),
+    }
+    shardings = {
+        "tokens": NamedSharding(mesh, shlib.guard_spec(
+            (gbatch, 1), P(ba, None), mesh)),
+        "pos": NamedSharding(mesh, shlib.guard_spec((gbatch,), P(ba), mesh)),
+    }
+    return structs, shardings
+
+
+def model_flops_estimate(cfg, shape_name: str) -> float:
+    """MODEL_FLOPS = 6*N_active*D tokens (train) or 2*N*D (inference)."""
+    seq, gbatch, kind = SHAPES[shape_name]
+    n = cfg.params_active_estimate
+    if kind == "train":
+        return 6.0 * n * seq * gbatch
+    if kind == "prefill":
+        return 2.0 * n * seq * gbatch
+    return 2.0 * n * 1 * gbatch
+
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    status: str                  # ok | skipped | failed
+    reason: str = ""
+    seconds: float = 0.0
+    report: dict | None = None
+    hlo_dump: str = ""           # gzipped HLO text (offline re-analysis)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod=False,
+               plan: shlib.Plan = shlib.DEFAULT_PLAN,
+               cfg_overrides: dict | None = None,
+               verbose=True) -> CellResult:
+    mesh_desc = "2x16x16" if multi_pod else "16x16"
+    cfg = config_base.get(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    ok, reason = applicable(cfg, shape_name)
+    if not ok:
+        return CellResult(arch, shape_name, mesh_desc, "skipped", reason)
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    model = build_model(cfg)
+    seq, gbatch, kind = SHAPES[shape_name]
+
+    params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if kind != "train":
+        # serving deployments ship bf16 weights (fp32 masters are a
+        # training-only artifact); halves parameter HBM for decode cells
+        params_struct = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+            if s.dtype == jnp.float32 and s.ndim >= 2 else s,
+            params_struct)
+    params_sh = shlib.param_shardings(model, params_struct, mesh, plan)
+    structs, input_sh = input_specs(cfg, shape_name, mesh)
+    ba = batch_axes(mesh)
+    act_rules = plan.act_rule_map(mesh, seq_shard=(kind != "decode"))
+    act_rules["batch"] = ba
+
+    T.set_mesh_rules(mesh, act_rules)
+    try:
+        if kind == "train":
+            opt = make_optimizer(cfg.optimizer, total_steps=1000)
+            opt_struct = jax.eval_shape(opt.init, params_struct)
+            opt_sh = shlib.mirror_opt_shardings(params_sh, opt_struct, mesh)
+            M = max(cfg.microbatches, 1)
+
+            def train_step(params, opt_state, batch, step):
+                if M == 1:
+                    loss, grads = jax.value_and_grad(model.loss)(
+                        params, batch)
+                else:
+                    # gradient accumulation: activations live for one
+                    # microbatch at a time; fp32 grads accumulate
+                    mb = jax.tree.map(
+                        lambda a: a.reshape((M, a.shape[0] // M)
+                                            + a.shape[1:]), batch)
+
+                    def one(acc, mbatch):
+                        l, g = jax.value_and_grad(model.loss)(
+                            params, mbatch)
+                        acc = jax.tree.map(
+                            lambda x, y: x + y.astype(jnp.float32),
+                            acc[0], g), acc[1] + l
+                        return acc, None
+
+                    g0 = jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32),
+                        params)
+                    (gsum, lsum), _ = jax.lax.scan(one, (g0, 0.0), mb)
+                    grads = jax.tree.map(lambda g: g / M, gsum)
+                    loss = lsum / M
+                new_p, new_o = opt.update(grads, opt_state, params, step)
+                return new_p, new_o, loss
+
+            step_struct = jax.ShapeDtypeStruct((), jnp.int32)
+            jitted = jax.jit(
+                train_step,
+                in_shardings=(params_sh, opt_sh, input_sh, None),
+                out_shardings=(params_sh, opt_sh, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_struct, opt_struct, structs,
+                                   step_struct)
+        elif kind == "prefill":
+            jitted = jax.jit(
+                lambda p, b: model.prefill(p, b)[0],
+                in_shardings=(params_sh, input_sh),
+            )
+            lowered = jitted.lower(params_struct, structs)
+        else:  # decode
+            cache_struct = jax.eval_shape(
+                lambda: model.init_cache(gbatch, seq))
+            cache_sh = shlib.cache_shardings(cache_struct, mesh, ba)
+            extra = {}
+            extra_sh = {}
+            if cfg.enc_layers:
+                n_enc = max(seq // 4, 8) if shape_name != "long_500k" else 8192
+                extra["enc_out"] = jax.ShapeDtypeStruct(
+                    (gbatch, n_enc, cfg.d_model), jnp.dtype(cfg.act_dtype))
+                extra["enc_positions"] = jax.ShapeDtypeStruct(
+                    (gbatch, n_enc), jnp.int32)
+                extra_sh["enc_out"] = NamedSharding(mesh, shlib.guard_spec(
+                    extra["enc_out"].shape, P(ba, "model", None), mesh))
+                extra_sh["enc_positions"] = NamedSharding(
+                    mesh, shlib.guard_spec(extra["enc_positions"].shape,
+                                           P(ba, "model"), mesh))
+
+            def serve_step(params, tokens, caches, pos, **kw):
+                return model.decode_step(params, tokens, caches, pos, **kw)
+
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(params_sh, input_sh["tokens"], cache_sh,
+                              input_sh["pos"]) +
+                             ((extra_sh["enc_out"], extra_sh["enc_positions"])
+                              if extra else ()),
+                donate_argnums=(2,),
+            )
+            args = (params_struct, structs["tokens"], cache_struct,
+                    structs["pos"])
+            if extra:
+                jitted = jax.jit(
+                    lambda p, t, c, q, eo, ep: model.decode_step(
+                        p, t, c, q, enc_out=eo, enc_positions=ep),
+                    in_shardings=(params_sh, input_sh["tokens"], cache_sh,
+                                  input_sh["pos"], extra_sh["enc_out"],
+                                  extra_sh["enc_positions"]),
+                    donate_argnums=(2,),
+                )
+                args = args + (extra["enc_out"], extra["enc_positions"])
+            lowered = jitted.lower(*args)
+
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        if verbose:
+            print(f"[{arch}/{shape_name}/{mesh_desc}] memory_analysis:",
+                  mem)
+            ca = compiled.cost_analysis()
+            if isinstance(ca, list):
+                ca = ca[0]
+            print(f"[{arch}/{shape_name}/{mesh_desc}] cost_analysis: "
+                  f"flops={ca.get('flops', 0):.3e} "
+                  f"bytes={ca.get('bytes accessed', 0):.3e}")
+        report = roofline_from_compiled(
+            compiled, arch=arch, shape=shape_name, mesh_desc=mesh_desc,
+            chips=chips, model_flops=model_flops_estimate(cfg, shape_name))
+        dump = _dump_hlo(compiled, f"{arch}_{shape_name}_{mesh_desc}_"
+                         f"{plan.name}")
+        return CellResult(arch, shape_name, mesh_desc, "ok",
+                          seconds=time.time() - t0,
+                          report=report.to_dict(), hlo_dump=dump)
+    finally:
+        T.clear_mesh_rules()
+
+
+def _dump_hlo(compiled, tag: str) -> str:
+    import gzip
+    import re as _re
+    d = os.environ.get("REPRO_HLO_DUMP_DIR", "hlo_dumps")
+    os.makedirs(d, exist_ok=True)
+    path = os.path.join(d, _re.sub(r"[^A-Za-z0-9_.-]", "_", tag) + ".txt.gz")
+    try:
+        with gzip.open(path, "wt") as f:
+            f.write(compiled.as_text())
+        # memory analysis summary rides along for offline re-analysis
+        mem = compiled.memory_analysis()
+        with open(path + ".mem.json", "w") as f:
+            json.dump({
+                "arguments": int(getattr(mem, "argument_size_in_bytes", 0)),
+                "outputs": int(getattr(mem, "output_size_in_bytes", 0)),
+                "temps": int(getattr(mem, "temp_size_in_bytes", 0)),
+                "peak": int(getattr(mem, "peak_memory_in_bytes", 0) or 0),
+            }, f)
+    except OSError:
+        return ""
+    return path
+
+
+def run_all(archs=None, shapes=None, meshes=(False, True),
+            results_path=RESULTS_PATH):
+    archs = archs or config_base.all_archs()
+    shapes = shapes or list(SHAPES)
+    try:
+        with open(results_path) as f:
+            results = json.load(f)
+    except FileNotFoundError:
+        results = {}
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in shapes:
+                key = f"{arch}|{shape}|{'2x16x16' if multi_pod else '16x16'}"
+                if key in results and results[key]["status"] in ("ok", "skipped"):
+                    continue
+                print(f"=== {key} ===", flush=True)
+                try:
+                    res = lower_cell(arch, shape, multi_pod=multi_pod)
+                except Exception as e:
+                    traceback.print_exc()
+                    res = CellResult(arch, shape,
+                                     "2x16x16" if multi_pod else "16x16",
+                                     "failed", reason=f"{type(e).__name__}: {e}")
+                results[key] = dataclasses.asdict(res)
+                with open(results_path, "w") as f:
+                    json.dump(results, f, indent=1)
+                print(f"--- {key}: {res.status} ({res.seconds:.1f}s) "
+                      f"{res.reason}", flush=True)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--results", default=RESULTS_PATH)
+    ap.add_argument("--plan", default="baseline",
+                    choices=list(shlib.PLAN_VARIANTS))
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg override key=value (e.g. kv_block=2048)")
+    args = ap.parse_args()
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            pass
+        overrides[k] = v
+    if args.all:
+        run_all(results_path=args.results,
+                archs=[args.arch] if args.arch else None,
+                shapes=[args.shape] if args.shape else None)
+        return
+    try:
+        res = lower_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                         plan=shlib.PLAN_VARIANTS[args.plan],
+                         cfg_overrides=overrides or None)
+    except Exception as e:
+        traceback.print_exc()
+        res = CellResult(args.arch, args.shape,
+                         "2x16x16" if args.multi_pod else "16x16",
+                         "failed", reason=f"{type(e).__name__}: {e}")
+    print(json.dumps(dataclasses.asdict(res), indent=2))
+    # merge into the results cache so per-cell subprocess driving works
+    try:
+        with open(args.results) as f:
+            results = json.load(f)
+    except FileNotFoundError:
+        results = {}
+    key = f"{args.arch}|{args.shape}|{res.mesh}"
+    if args.plan != "baseline" or overrides:
+        key += f"|{args.plan}" + (
+            "|" + ";".join(f"{k}={v}" for k, v in overrides.items())
+            if overrides else "")
+    results[key] = dataclasses.asdict(res)
+    with open(args.results, "w") as f:
+        json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

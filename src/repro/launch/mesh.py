@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module never touches JAX device state — required because the dry-run
+forces 512 host devices via XLA_FLAGS before first JAX init, while smoke
+tests and benchmarks must keep the default single device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi-pod adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 2, model: int = 4):
+    """Small mesh over forced host devices for integration tests."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,246 @@
+"""Sharding plans: logical param axes -> mesh PartitionSpecs + activation
+constraint rules.
+
+Strategy (arch-universal; the same mechanism the SASA auto-tuner uses for
+stencils is applied here — a declarative plan evaluated per workload):
+
+  * Parameter storage is FSDP/ZeRO-3: the "embed"-like dim of every weight
+    shards over "data"; expert and vocab/head dims shard over "model"
+    (EP / TP) *when divisible* — a per-shape guard drops any axis whose
+    dim is not divisible by the mesh axis (jit arguments must be evenly
+    sharded; XLA handles uneven shapes only inside the program).
+  * Compute parallelism comes from activation constraints (heads / mlp /
+    vocab / sequence over "model"), which tolerate uneven dims — GSPMD
+    pads internally.  So yi-34b's 56 heads still compute 16-way TP even
+    though its weights store FSDP-only.
+  * The residual stream is sequence-sharded over "model" between layers
+    (Megatron-SP): scan-carried activations shrink 16x, which is what
+    keeps 40-60 layer models inside 16 GB HBM at global batch 256 x 4 k.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Maps logical axes to mesh axes.  None = replicate."""
+
+    name: str = "fsdp_tp"
+    rules: tuple = (
+        ("vocab", "model"),
+        ("embed", ("data", "pod")),   # FSDP over data AND pod (multi-pod
+                                      # halves per-chip master params;
+                                      # guard drops "pod" on 1-pod meshes)
+        ("heads", "model"),
+        ("kv", "model"),
+        ("head_dim", None),
+        ("mlp", "model"),
+        ("mlp2", None),
+        ("expert", "model"),
+        ("layers", None),
+    )
+    # activation constraints (uneven-tolerant)
+    act_rules: tuple = (
+        ("batch", ("pod", "data")),
+        ("heads", "model"),
+        ("mlp", "model"),
+        ("vocab", "model"),
+        ("seq", "model"),
+        ("expert", "model"),
+    )
+
+    def rule(self, axis):
+        return dict(self.rules).get(axis)
+
+    def act_rule_map(self, mesh, *, seq_shard=True):
+        m = dict(self.act_rules)
+        if not seq_shard:
+            m["seq"] = None
+        return {k: _filter_axes(v, mesh) for k, v in m.items()}
+
+
+def _filter_axes(axes, mesh):
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return axes if axes in mesh.axis_names else None
+    kept = tuple(a for a in axes if a in mesh.axis_names)
+    return kept if kept else None
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def guard_spec(shape, spec: P, mesh: Mesh) -> P:
+    """Drop sharding on any dim not divisible by its mesh-axis product, and
+    on repeated mesh axes (first occurrence wins — e.g. MoE expert weights
+    map both 'expert' and 'mlp' to the model axis; EP takes priority).
+    jit *arguments* require even sharding; this guard makes every spec
+    legal for any shape (uneven dims fall back to replication)."""
+    out = []
+    used: set = set()
+    for d, axes in enumerate(spec):
+        axes = _filter_axes(axes, mesh)
+        if axes is None or d >= len(shape):
+            out.append(None)
+            continue
+        ax_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
+        ax_tuple = tuple(a for a in ax_tuple if a not in used)
+        if not ax_tuple:
+            out.append(None)
+            continue
+        axes = ax_tuple[0] if len(ax_tuple) == 1 else ax_tuple
+        size = _axis_size(mesh, axes)
+        if shape[d] % size == 0:
+            out.append(axes)
+            used.update(ax_tuple)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def logical_to_spec(logical: tuple, plan: Plan) -> list:
+    """Raw per-dim axis list (NOT a PartitionSpec: P() rejects duplicate
+    axes at construction, and duplicates are legitimately produced by e.g.
+    MoE expert weights before the guard dedups them)."""
+    return [plan.rule(a) if a is not None else None for a in logical]
+
+
+def param_shardings(model, params_struct, mesh: Mesh, plan: Plan):
+    """Build a NamedSharding tree for the params (struct or concrete)."""
+    specs = model.param_specs()
+
+    def walk(struct, spec):
+        if isinstance(struct, dict):
+            return {k: walk(struct[k], spec[k] if isinstance(spec, dict)
+                            else spec) for k in struct}
+        if isinstance(struct, (list, tuple)):
+            if isinstance(spec, (list, tuple)) and len(spec) == len(struct):
+                t = type(struct)([walk(s, sp) for s, sp in zip(struct, spec)])
+                return t
+            return type(struct)([walk(s, spec) for s in struct])
+        # leaf array / ShapeDtypeStruct
+        logical = spec if isinstance(spec, tuple) else ()
+        p = logical_to_spec(logical, plan)
+        p = guard_spec(struct.shape, p, mesh)
+        return NamedSharding(mesh, p)
+
+    return walk(params_struct, specs)
+
+
+def mirror_opt_shardings(param_sh, opt_struct, mesh: Mesh):
+    """Optimizer state shardings: leaves with the same shape as their param
+    inherit the param spec; factored/shrunk leaves drop trailing axes."""
+    flat_p = {tuple(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path): s
+              for path, s in
+              jax.tree_util.tree_flatten_with_path(param_sh)[0]}
+
+    def best_match(path, shape):
+        # match by longest suffix of the param path present in opt path
+        for plen in range(len(path), 0, -1):
+            for ppath, sh in flat_p.items():
+                if path[-plen:] == ppath[-plen:] or \
+                        (len(ppath) <= plen and path[-len(ppath):] == ppath):
+                    spec = list(sh.spec)
+                    spec += [None] * (len(shape) - len(spec))
+                    return guard_spec(shape, P(*spec[:len(shape)]), mesh)
+        return guard_spec(shape, P(*[None] * len(shape)), mesh)
+
+    flat_o, treedef = jax.tree_util.tree_flatten_with_path(opt_struct)
+    out = []
+    for path, leaf in flat_o:
+        keys = tuple(str(getattr(k, "key", getattr(k, "idx", k)))
+                     for k in path)
+        # strip optimizer-level prefixes/suffixes like 'm','v','vr','vc'
+        core = tuple(k for k in keys if k not in
+                     ("m", "v", "vr", "vc", "opt"))
+        sh = flat_p.get(core)
+        if sh is not None and len(sh.spec) >= len(leaf.shape):
+            spec = list(sh.spec)
+            if keys and keys[-1] == "vr":      # factored: drop last dim
+                spec = spec[:-1]
+            elif keys and keys[-1] == "vc":    # factored: drop 2nd-last
+                spec = spec[:-2] + spec[-1:]
+            spec = (spec + [None] * len(leaf.shape))[:len(leaf.shape)]
+            out.append(NamedSharding(mesh, guard_spec(leaf.shape, P(*spec), mesh)))
+        else:
+            out.append(NamedSharding(
+                mesh, guard_spec(leaf.shape, P(*[None] * len(leaf.shape)),
+                                 mesh)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_shardings(batch_struct, mesh: Mesh, batch_axes_: tuple):
+    def one(leaf):
+        spec = [batch_axes_] + [None] * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, guard_spec(leaf.shape, P(*spec), mesh))
+    return jax.tree.map(one, batch_struct)
+
+
+def cache_shardings(cache_struct, mesh: Mesh, batch_axes_: tuple,
+                    length_axis: str = "model"):
+    """KV caches: batch over DP axes, cache-length dim over `model`
+    (flash-decoding style KV parallelism); recurrent states shard their
+    widest divisible channel dim over `model`.
+
+    ``cache_struct`` is the (scanned, tail) pair from init_stack_caches:
+    scanned leaves carry a leading layer-groups axis (never sharded)."""
+    def spec_for(shape, layer_lead: bool):
+        off = 1 if layer_lead else 0
+        spec = [None] * len(shape)
+        if len(shape) > off:
+            spec[off] = batch_axes_
+        if len(shape) > off + 1:
+            spec[off + 1] = length_axis
+        # fallback: if the length dim can't shard (recurrent states),
+        # try the widest trailing channel dim
+        if (len(shape) > off + 1
+                and shape[off + 1] % _axis_size(mesh, length_axis)):
+            spec[off + 1] = None
+            for d in range(len(shape) - 1, off + 1, -1):
+                if shape[d] % _axis_size(mesh, length_axis) == 0:
+                    spec[d] = length_axis
+                    break
+        return NamedSharding(mesh, guard_spec(shape, P(*spec), mesh))
+
+    scanned, tails = cache_struct
+    sc_sh = jax.tree.map(lambda l: spec_for(l.shape, True), scanned)
+    tail_sh = jax.tree.map(lambda l: spec_for(l.shape, False), tails)
+    return (sc_sh, tail_sh)
+
+
+DEFAULT_PLAN = Plan()
+
+# Named plan variants for §Perf hillclimbing (hypothesis -> change -> measure)
+PLAN_VARIANTS: dict[str, Plan] = {
+    "baseline": DEFAULT_PLAN,
+    # no sequence sharding of the residual stream: shows why SP is load-
+    # bearing for memory (scan carries grow 16x)
+    "noseq": Plan(name="noseq", act_rules=(
+        ("batch", ("pod", "data")), ("heads", "model"), ("mlp", "model"),
+        ("vocab", "model"), ("seq", None), ("expert", "model"))),
+    # pure FSDP: no tensor parallelism on activations at all
+    "fsdp_only": Plan(name="fsdp_only", act_rules=(
+        ("batch", ("pod", "data")), ("heads", None), ("mlp", None),
+        ("vocab", None), ("seq", "model"), ("expert", "model"))),
+    # TP on params too (vocab/heads/mlp dims over model where divisible)
+    # is already the baseline param rule set; this variant turns OFF fsdp
+    # (params replicated over data) to measure the FSDP all-gather cost
+    "no_fsdp": Plan(name="no_fsdp", rules=(
+        ("vocab", "model"), ("embed", None), ("heads", "model"),
+        ("kv", "model"), ("head_dim", None), ("mlp", "model"),
+        ("mlp2", None), ("expert", "model"), ("layers", None))),
+}

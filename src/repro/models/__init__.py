@@ -1,0 +1,1 @@
+"""Model substrate: layers, mixers (attention/MoE/SSM/RG-LRU), architectures."""

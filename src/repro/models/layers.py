@@ -1,0 +1,372 @@
+"""Core transformer layers in plain JAX (params = nested dict pytrees).
+
+Conventions:
+  * activations are (batch, seq, d_model) in ``cfg.act_dtype`` (bf16);
+  * params are fp32 masters; matmuls cast to act dtype;
+  * every init function returns (params, specs) where specs mirrors the
+    params tree with *logical axis names*; the launch layer maps logical
+    names to mesh axes (see repro/launch/sharding.py).
+
+Logical axis vocabulary:
+  "embed"   d_model            "vocab"  vocabulary
+  "heads"   attention heads    "kv"     kv heads
+  "mlp"     ffn hidden         "expert" MoE experts
+  "layers"  scan-stacked layer axis (never sharded)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _init_dense(key, shape, in_axis=0, dtype=jnp.float32):
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else int(
+        np.prod([shape[a] for a in in_axis])
+    )
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def dense_init(key, shape, logical, in_axis=0):
+    return _init_dense(key, shape, in_axis), logical
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+
+def rmsnorm_init(d):
+    return jnp.ones((d,), jnp.float32), ("embed",)
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale).astype(dt)
+
+
+def layernorm_init(d):
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}, \
+           {"scale": ("embed",), "bias": ("embed",)}
+
+
+def layernorm(x, p, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embedding
+# --------------------------------------------------------------------------
+
+
+def rope(x, positions, theta=10000.0):
+    """x: (..., seq, heads, d_head); positions: (..., seq)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    angles = angles[..., None, :]  # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+
+def swiglu_init(key, d, f):
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "wi": _init_dense(k1, (d, f)),
+        "wg": _init_dense(k2, (d, f)),
+        "wo": _init_dense(k3, (f, d)),
+    }
+    specs = {
+        "wi": ("embed", "mlp"), "wg": ("embed", "mlp"), "wo": ("mlp", "embed"),
+    }
+    return params, specs
+
+
+def swiglu(x, p):
+    dt = x.dtype
+    h = jnp.einsum("...d,df->...f", x, p["wi"].astype(dt))
+    g = jnp.einsum("...d,df->...f", x, p["wg"].astype(dt))
+    h = jax.nn.silu(g) * h
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(dt))
+
+
+def geglu(x, p):
+    dt = x.dtype
+    h = jnp.einsum("...d,df->...f", x, p["wi"].astype(dt))
+    g = jnp.einsum("...d,df->...f", x, p["wg"].astype(dt))
+    h = jax.nn.gelu(g) * h
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(dt))
+
+
+# --------------------------------------------------------------------------
+# Attention (GQA) — full chunked, local windowed, cross, and decode
+# --------------------------------------------------------------------------
+
+
+def attention_init(key, d_model, n_heads, n_kv, d_head, qkv_bias=False):
+    ks = jax.random.split(key, 4)
+    params = {
+        "wq": _init_dense(ks[0], (d_model, n_heads, d_head)),
+        "wk": _init_dense(ks[1], (d_model, n_kv, d_head)),
+        "wv": _init_dense(ks[2], (d_model, n_kv, d_head)),
+        "wo": _init_dense(ks[3], (n_heads, d_head, d_model), in_axis=(0, 1)),
+    }
+    specs = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv", "head_dim"),
+        "wv": ("embed", "kv", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if qkv_bias:
+        params["bq"] = jnp.zeros((n_heads, d_head), jnp.float32)
+        params["bk"] = jnp.zeros((n_kv, d_head), jnp.float32)
+        params["bv"] = jnp.zeros((n_kv, d_head), jnp.float32)
+        specs["bq"] = ("heads", "head_dim")
+        specs["bk"] = ("kv", "head_dim")
+        specs["bv"] = ("kv", "head_dim")
+    return params, specs
+
+
+def _project_qkv(x, p, positions, theta, use_rope=True):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if use_rope:
+        q = rope(q, positions, theta)
+        k = rope(k, positions, theta)
+    return q, k, v
+
+
+def _repeat_kv(k, n_heads):
+    """(B,S,Hkv,D) -> (B,S,Hq,D) by repeating groups."""
+    n_kv = k.shape[2]
+    if n_kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // n_kv, axis=2)
+
+
+def attention_chunked(q, k, v, *, causal=True, kv_block=1024,
+                      q_positions=None, kv_positions=None, window=0):
+    """Memory-bounded attention: lax.scan over KV chunks w/ online softmax.
+
+    This is the flash-attention computation pattern expressed at the XLA
+    level: live memory is O(B*H*Sq*kv_block) instead of O(B*H*Sq*Skv).
+    ``window > 0`` additionally masks keys older than ``window`` positions.
+    """
+    B, Sq, H, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)  # grouped: K/V are never expanded
+    if q_positions is None:
+        q_positions = jnp.arange(Sq)[None, :].repeat(B, 0)
+    if kv_positions is None:
+        kv_positions = jnp.arange(Skv)[None, :].repeat(B, 0)
+    scale = 1.0 / math.sqrt(D)
+    n_blocks = -(-Skv // kv_block)
+    Skv_pad = n_blocks * kv_block
+    pad = Skv_pad - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)),
+                               constant_values=-(10 ** 9))
+    kb = k.reshape(B, n_blocks, kv_block, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, n_blocks, kv_block, Hkv, D).transpose(1, 0, 2, 3, 4)
+    pb = kv_positions.reshape(B, n_blocks, kv_block).transpose(1, 0, 2)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kc, vc, pc = blk
+        # operands stay bf16; accumulate fp32 (no fp32 copy of K/V blocks)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kc,
+                       preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones_like(s, dtype=bool)
+        pcb = pc[:, None, None, None, :]
+        qpb = q_positions[:, None, None, :, None]
+        if causal:
+            mask &= pcb <= qpb
+        if window:
+            mask &= pcb > qpb - window
+        mask &= pcb >= 0
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, Hkv, G, Sq, D), jnp.float32)
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]     # (B,Hkv,G,Sq,D)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)
+    return out.astype(q.dtype)
+
+
+def local_attention_banded(q, k, v, window, q_positions=None):
+    """Sliding-window attention as a 1-D *stencil*: queries in block i attend
+    to keys in blocks {i-1, i} only (block size == window), i.e. a sequence
+    partition plus one halo block — the paper's border-streaming pattern
+    applied to the sequence dimension.  Memory O(S * 2W) instead of O(S^2).
+    """
+    B, S, H, D = q.shape
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    W = window
+    n = -(-S // W)
+    Sp = n * W
+    pad = Sp - S
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    pos = jnp.arange(Sp)
+    qb = qp.reshape(B, n, W, H, D)
+    # halo: previous key block prepended (zeros for block 0 = exterior-zero)
+    kb = kp.reshape(B, n, W, H, D)
+    vb = vp.reshape(B, n, W, H, D)
+    k_halo = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    v_halo = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([k_halo, kb], axis=2)  # (B,n,2W,H,D)
+    v2 = jnp.concatenate([v_halo, vb], axis=2)
+    qpos = pos.reshape(n, W)
+    kpos = jnp.concatenate(
+        [qpos - W, qpos], axis=1
+    )  # (n, 2W); block0's halo -> negative = masked
+    s = jnp.einsum("bnqhd,bnkhd->bnhqk", qb.astype(jnp.float32),
+                   k2.astype(jnp.float32)) / math.sqrt(D)
+    mask = (kpos[:, None, :] <= qpos[:, :, None]) & \
+           (kpos[:, None, :] > qpos[:, :, None] - W) & \
+           (kpos[:, None, :] >= 0) & (qpos[:, :, None] < S)
+    s = jnp.where(mask[None, :, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bnhqk,bnkhd->bnqhd", p, v2.astype(jnp.float32))
+    return out.reshape(B, Sp, H, D)[:, :S].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_positions, q_position,
+                     window=0):
+    """Single-step decode: q (B,1,H,D) against a (B,L,Hkv,D) cache.
+
+    The cache stays in its storage dtype (never expanded across GQA
+    groups — a 7x blow-up for yi-34b's 56q/8kv); accumulation is forced
+    to fp32 via preferred_element_type."""
+    B, _, H, D = q.shape
+    Hkv = k_cache.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, 1, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(k_cache.dtype), k_cache,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    mask = (cache_positions[:, None, None, None, :]
+            <= q_position[:, None, None, None, None])
+    mask &= cache_positions[:, None, None, None, :] >= 0
+    if window:
+        mask &= cache_positions[:, None, None, None, :] > (
+            q_position[:, None, None, None, None] - window
+        )
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def attn_out(ctx, p):
+    return jnp.einsum("bshk,hkd->bsd", ctx, p["wo"].astype(ctx.dtype))
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+
+
+def embedding_init(key, vocab, d):
+    return _init_dense(key, (vocab, d)) , ("vocab", "embed")
+
+
+def embed(tokens, table, dtype):
+    return jnp.take(table, tokens, axis=0).astype(dtype)
+
+
+def unembed(x, table):
+    return jnp.einsum("bsd,vd->bsv", x, table.astype(x.dtype))
+
+
+def chunked_cross_entropy(h, table, targets, valid, n_chunks=8):
+    """Token cross-entropy WITHOUT materialising (B, S, V) logits.
+
+    Scans the vocabulary in chunks with an online logsumexp and a
+    target-logit gather; each chunk is rematerialised in the backward
+    pass (jax.checkpoint), so live memory is O(B*S*V/n_chunks).  For a
+    150k-200k vocab this removes the dominant training buffer (measured
+    2.3 GiB x ~10 live on qwen2-moe train_4k).
+
+    Returns (sum_nll, n_valid).
+    """
+    B, S, D = h.shape
+    V = table.shape[0]
+    Vc = -(-V // n_chunks)
+    pad = n_chunks * Vc - V
+    tbl = jnp.pad(table, ((0, pad), (0, 0))) if pad else table
+    tbl = tbl.reshape(n_chunks, Vc, D)
+    tgt = jnp.where(valid, targets, 0)
+
+    @jax.checkpoint
+    def chunk_stats(carry, args):
+        m, l, tlogit = carry
+        tc, c = args
+        logits = jnp.einsum("bsd,vd->bsv", h, tc.astype(h.dtype),
+                            preferred_element_type=jnp.float32)
+        # mask vocab padding
+        vidx = c * Vc + jnp.arange(Vc)
+        logits = jnp.where(vidx < V, logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(-1))
+        l = l * jnp.exp(m - m_new) + jnp.exp(
+            logits - m_new[..., None]).sum(-1)
+        # gather the target logit if it falls in this chunk
+        local = tgt - c * Vc
+        in_chunk = (local >= 0) & (local < Vc)
+        got = jnp.take_along_axis(
+            logits, jnp.clip(local, 0, Vc - 1)[..., None], axis=-1)[..., 0]
+        tlogit = jnp.where(in_chunk, got, tlogit)
+        return (m_new, l, tlogit), None
+
+    m0 = jnp.full((B, S), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, S), jnp.float32)
+    t0 = jnp.zeros((B, S), jnp.float32)
+    (m, l, tlogit), _ = jax.lax.scan(
+        chunk_stats, (m0, l0, t0), (tbl, jnp.arange(n_chunks)))
+    nll = m + jnp.log(jnp.maximum(l, 1e-30)) - tlogit
+    nll = jnp.where(valid, nll, 0.0)
+    return nll.sum(), valid.sum()

@@ -1,0 +1,192 @@
+"""Model wrapper: init / loss / prefill / decode over any ArchConfig.
+
+A ``Model`` bundles the stack with embeddings, modality-frontend stubs
+(per assignment: audio/VLM frontends provide *precomputed* embeddings via
+input_specs; only a projection lives here), the LM head, and the
+train/serve entry points the launcher jits.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: Any
+
+    # ---------------- parameter init ----------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        params: dict = {}
+        params["embed"], _ = (L.embedding_init(ks[0], cfg.vocab, cfg.d_model),
+                              None)
+        params["embed"] = params["embed"][0]
+        sc, tail, _ = T._stack_init(ks[1], cfg, cfg.pattern, cfg.n_layers)
+        params["layers"] = {"scanned": sc, "tail": tail}
+        params["ln_f"], _ = L.rmsnorm_init(cfg.d_model)
+        if not cfg.tie_embeddings:
+            params["unembed"] = L._init_dense(ks[2], (cfg.vocab, cfg.d_model),
+                                              in_axis=1)
+        if cfg.enc_layers:
+            esc, etail, _ = T._stack_init(ks[3], cfg, cfg.enc_pattern,
+                                          cfg.enc_layers)
+            params["encoder"] = {"scanned": esc, "tail": etail}
+            params["ln_enc"], _ = L.rmsnorm_init(cfg.d_model)
+        if cfg.frontend:
+            params["frontend_proj"] = L._init_dense(
+                ks[4], (cfg.frontend_dim, cfg.d_model))
+        return params
+
+    # ---------------- logical sharding specs ----------------
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        specs: dict = {"embed": ("vocab", "embed"), "ln_f": ("embed",)}
+        sc, tails = T._stack_specs(cfg, cfg.pattern, cfg.n_layers)
+        specs["layers"] = {"scanned": sc, "tail": tails}
+        if not cfg.tie_embeddings:
+            specs["unembed"] = ("vocab", "embed")
+        if cfg.enc_layers:
+            esc, etails = T._stack_specs(cfg, cfg.enc_pattern, cfg.enc_layers)
+            specs["encoder"] = {"scanned": esc, "tail": etails}
+            specs["ln_enc"] = ("embed",)
+        if cfg.frontend:
+            specs["frontend_proj"] = (None, "embed")
+        return specs
+
+    # ---------------- embedding assembly ----------------
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.act_dtype)
+        tok = batch["tokens"]
+        x = L.embed(tok, params["embed"], dt)
+        if cfg.frontend and "frontend_embeds" in batch:
+            fe = batch["frontend_embeds"].astype(dt)
+            fe = jnp.einsum("bnd,de->bne", fe, params["frontend_proj"].astype(dt))
+            if cfg.enc_layers:
+                return x, fe            # enc-dec: frontend feeds the encoder
+            x = jnp.concatenate([fe, x], axis=1)  # VLM early fusion
+        return x, None
+
+    def _encode(self, params, enc_in):
+        cfg = self.cfg
+        pos = jnp.arange(enc_in.shape[1])[None].repeat(enc_in.shape[0], 0)
+        h, _ = T.stack_apply(
+            cfg, cfg.enc_pattern, params["encoder"]["scanned"],
+            params["encoder"]["tail"], enc_in, positions=pos, mode="train")
+        return L.rmsnorm(h, params["ln_enc"]), pos
+
+    def _trunk(self, params, x, positions, mode, caches=None,
+               enc_out=None, enc_positions=None):
+        cfg = self.cfg
+        x = T.constrain(x, ("batch", None, None))
+        h, new_caches = T.stack_apply(
+            cfg, cfg.pattern, params["layers"]["scanned"],
+            params["layers"]["tail"], x, positions=positions, mode=mode,
+            caches=caches, enc_out=enc_out, enc_positions=enc_positions)
+        h = L.rmsnorm(h, params["ln_f"])
+        table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        logits = L.unembed(h, table)
+        if mode == "train":
+            # training loss reduces over vocab pointwise per token: keep
+            # logits sequence-sharded so no chip materialises (S, V) fully
+            logits = T.constrain(logits, ("batch", "seq", None))
+        else:
+            logits = T.constrain(logits, ("batch", None, "vocab"))
+        return logits, new_caches
+
+    # ---------------- train ----------------
+    CHUNKED_XENT_MIN_VOCAB = 65536
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x, fe = self._embed_inputs(params, batch)
+        enc_out = enc_pos = None
+        if cfg.enc_layers:
+            enc_in = fe if fe is not None else x  # audio enc-dec: frontend
+            enc_out, enc_pos = self._encode(params, enc_in)
+        B, S = x.shape[0], x.shape[1]
+        positions = jnp.arange(S)[None].repeat(B, 0)
+        labels = batch["labels"]
+        if cfg.frontend and not cfg.enc_layers and "frontend_embeds" in batch:
+            # VLM: frontend positions carry no next-token target
+            n_front = batch["frontend_embeds"].shape[1]
+            pad = jnp.full((B, n_front), -100, labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        targets = labels[:, 1:]
+        valid = targets >= 0
+
+        table = (params["embed"] if cfg.tie_embeddings
+                 else params["unembed"])
+        if cfg.vocab >= self.CHUNKED_XENT_MIN_VOCAB:
+            # big-vocab path: fuse unembed into a chunked online-softmax
+            # CE so (B,S,V) logits are never materialised
+            h, _ = self._hidden(params, x, positions, enc_out, enc_pos)
+            nll_sum, n = L.chunked_cross_entropy(
+                h[:, :-1], table, targets, valid)
+            return nll_sum / jnp.maximum(n, 1)
+        logits, _ = self._trunk(params, x, positions, "train",
+                                enc_out=enc_out, enc_positions=enc_pos)
+        logits = logits[:, :-1]
+        tgt = jnp.where(valid, targets, 0)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        nll = jnp.where(valid, nll, 0.0)
+        return nll.sum() / jnp.maximum(valid.sum(), 1)
+
+    def _hidden(self, params, x, positions, enc_out=None, enc_pos=None):
+        """Trunk up to the final norm (no unembedding)."""
+        cfg = self.cfg
+        x = T.constrain(x, ("batch", None, None))
+        h, caches = T.stack_apply(
+            cfg, cfg.pattern, params["layers"]["scanned"],
+            params["layers"]["tail"], x, positions=positions, mode="train",
+            enc_out=enc_out, enc_positions=enc_pos)
+        h = L.rmsnorm(h, params["ln_f"])
+        h = T.constrain(h, ("batch", "seq", None))
+        return h, caches
+
+    # ---------------- serve ----------------
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        x, fe = self._embed_inputs(params, batch)
+        enc_out = enc_pos = None
+        if cfg.enc_layers:
+            enc_in = fe if fe is not None else x
+            enc_out, enc_pos = self._encode(params, enc_in)
+        B, S = x.shape[0], x.shape[1]
+        positions = jnp.arange(S)[None].repeat(B, 0)
+        logits, caches = self._trunk(params, x, positions, "prefill",
+                                     enc_out=enc_out, enc_positions=enc_pos)
+        return logits[:, -1], caches
+
+    def init_cache(self, batch_size, cache_len, dtype=None):
+        cfg = self.cfg
+        dt = jnp.dtype(dtype or cfg.act_dtype)
+        return T.init_stack_caches(cfg, cfg.pattern, cfg.n_layers,
+                                   batch_size, cache_len, dt)
+
+    def decode_step(self, params, tokens, caches, pos,
+                    enc_out=None, enc_positions=None):
+        """tokens (B,1) int32; pos (B,) current positions."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.act_dtype)
+        x = L.embed(tokens, params["embed"], dt)
+        positions = pos[:, None]
+        logits, new_caches = self._trunk(params, x, positions, "decode",
+                                         caches=caches, enc_out=enc_out,
+                                         enc_positions=enc_positions)
+        return logits[:, 0], new_caches
+
+
+def build_model(cfg) -> Model:
+    return Model(cfg)

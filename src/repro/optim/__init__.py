@@ -1,0 +1,3 @@
+from repro.optim.optimizer import (
+    Optimizer, adamw, adafactor, make_optimizer, cosine_schedule,
+)

@@ -1,0 +1,394 @@
+"""Roofline terms from a compiled (dry-run) executable.
+
+  compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory term     = HLO_bytes / (chips * HBM_bw)
+  collective term = collective_bytes / (chips * link_bw)
+
+``compiled.cost_analysis()`` supplies FLOPs / bytes.  Collective bytes are
+NOT in cost_analysis: we parse the post-SPMD optimized HLO text and sum
+the operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute.  The partitioned module's shapes are
+per-device, so parsed totals are per-device values; dividing cost_analysis
+totals by `chips` puts all three terms in the same per-device units.
+
+Hardware constants (TPU v5e, per assignment):
+  197 TFLOP/s bf16 / chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+V5E_PEAK_BF16 = 197e12
+V5E_HBM_BW = 819e9
+V5E_ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(.+)$")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string; handles tuples by summing elements."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COMP_START_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_RE = re.compile(r"(?:calls|to_apply|condition|body)=%?([\w.\-]+)")
+_OP_RE = re.compile(r"=\s*[\w\[\],{}/*\s]+?\s([a-z][a-z0-9\-]*)\(")
+
+
+def parse_hlo_module(hlo_text: str):
+    """Split an HLO module into computations with instruction lines.
+
+    Returns (computations: {name: [line, ...]}, entry_name).
+    """
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_START_RE.match(line)
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            if line.lstrip().startswith("ENTRY"):
+                entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None and "=" in line:
+            comps[cur].append(line.strip())
+    return comps, entry
+
+
+def _instr_shapes(comps) -> dict[str, int]:
+    shapes = {}
+    for lines in comps.values():
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            name = m.group(1).lstrip("%")
+            shapes[name] = _shape_bytes(m.group(2).split("(", 1)[0])
+    return shapes
+
+
+def _dot_flops(line: str, shapes: dict[str, int],
+               dtype_numel: dict[str, int]) -> float:
+    """FLOPs of one dot: 2 * numel(out) * prod(contracting dims of lhs)."""
+    m = _DEF_RE.match(line)
+    if not m:
+        return 0.0
+    rhs = m.group(2)
+    out_type = rhs.split("(", 1)[0]
+    out_numel = _shape_numel(out_type)
+    args = rhs.split("(", 1)[1].split(")")[0]
+    operand_names = re.findall(r"%?([\w.\-]+)", args)
+    lhs = operand_names[0] if operand_names else None
+    cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+    if lhs is None or lhs not in dtype_numel or cdims is None:
+        return 2.0 * out_numel  # fallback: at least the output writes
+    lhs_dims = dtype_numel[lhs]
+    k = 1
+    for d in cdims.group(1).split(","):
+        if d and int(d) < len(lhs_dims):
+            k *= lhs_dims[int(d)]
+    return 2.0 * out_numel * k
+
+
+def _shape_numel(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        if m.group(1) not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                if d:
+                    n *= int(d)
+        total += n
+    return total
+
+
+def _shape_dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return ()
+    return tuple(int(d) for d in m.group(2).split(",") if d)
+
+
+def analyze_hlo(hlo_text: str) -> dict:
+    """Trip-count-aware per-device totals from a partitioned HLO module.
+
+    XLA's cost_analysis counts while (lax.scan) bodies ONCE; production
+    models scan over layers, so everything inside the layer loop would be
+    undercounted by n_layers.  Every while op carries
+    backend_config known_trip_count — we build the computation call graph
+    (while: x trip_count; call/fusion/reduce: x 1), propagate multiplicity
+    from the entry, and scale dot FLOPs, instruction bytes, and collective
+    operand bytes by their computation's multiplicity.
+    """
+    comps, entry = parse_hlo_module(hlo_text)
+    shapes = _instr_shapes(comps)
+    # per-instruction dims (for dot contraction sizes)
+    dims: dict[str, tuple] = {}
+    for lines in comps.values():
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if m:
+                dims[m.group(1).lstrip("%")] = _shape_dims(
+                    m.group(2).split("(", 1)[0])
+
+    # ---- call graph with weights ----
+    edges: dict[str, list[tuple[str, float]]] = {c: [] for c in comps}
+    fusion_bodies: set[str] = set()
+    for cname, lines in comps.items():
+        for line in lines:
+            if " while(" in line:
+                tm = _TRIP_RE.search(line)
+                trip = float(tm.group(1)) if tm else 1.0
+                bm = re.search(r"body=%?([\w.\-]+)", line)
+                cm = re.search(r"condition=%?([\w.\-]+)", line)
+                if bm and bm.group(1) in comps:
+                    edges[cname].append((bm.group(1), trip))
+                if cm and cm.group(1) in comps:
+                    edges[cname].append((cm.group(1), trip + 1))
+            else:
+                for mm in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)",
+                                      line):
+                    callee = mm.group(1)
+                    if callee in comps:
+                        edges[cname].append((callee, 1.0))
+                        fusion_bodies.add(callee)
+
+    # propagate multiplicity from entry (DAG: converges in depth rounds)
+    mult: dict[str, float] = {c: 0.0 for c in comps}
+    if entry:
+        mult[entry] = 1.0
+    for _ in range(len(comps)):
+        new = {c: 0.0 for c in comps}
+        if entry:
+            new[entry] = 1.0
+        for c in comps:
+            if mult[c] <= 0.0:
+                continue
+            for callee, w in edges[c]:
+                new[callee] += mult[c] * w
+        if new == mult:
+            break
+        mult = new
+
+    flops = 0.0
+    bytes_accessed = 0.0
+    per_kind = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    skip_ops = {"parameter", "constant", "tuple", "get-tuple-element",
+                "bitcast", "after-all", "partition-id", "replica-id"}
+    for cname, lines in comps.items():
+        m_c = mult.get(cname, 0.0)
+        if m_c == 0.0:
+            continue
+        in_fusion = cname in fusion_bodies
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            rhs = dm.group(2)
+            opm = _OP_RE.search(line)
+            op = opm.group(1) if opm else ""
+            if op in ("dot", "convolution"):
+                flops += m_c * _dot_flops(line, shapes, dims)
+            kind = next((k for k in _COLLECTIVES
+                         if op == k or op.startswith(k + "-")), None)
+            if kind is not None:
+                counts[kind] += int(m_c)
+                args = rhs.split("(", 1)[1].split(")")[0]
+                got = sum(shapes.get(on, 0) for on in
+                          re.findall(r"%?([\w.\-]+)", args))
+                if got == 0:
+                    got = _shape_bytes(rhs.split("(", 1)[0])
+                per_kind[kind] += m_c * got
+            if in_fusion or not op or op in skip_ops:
+                continue
+            # byte accounting: operand + output bytes per materialised op
+            # (fusion interiors are skipped; the fusion op itself counts)
+            out_b = _shape_bytes(rhs.split("(", 1)[0])
+            args = rhs.split("(", 1)[1].split(")")[0] if "(" in rhs else ""
+            op_bytes = [shapes.get(on, 0) for on in
+                        re.findall(r"%([\w.\-]+)", args)]
+            in_b = sum(op_bytes)
+            name = dm.group(1)
+            if "dynamic-update-slice" in name or op == "dynamic-update-slice":
+                # in-place DUS: traffic = read update + write region, NOT
+                # the whole aliased buffer (charging it inflates loop-
+                # carried stacking by the buffer/slice ratio)
+                update = in_b - max(op_bytes, default=0)
+                bytes_accessed += m_c * 2 * update
+            elif "dynamic-slice" in name or op == "dynamic-slice":
+                bytes_accessed += m_c * 2 * out_b
+            else:
+                bytes_accessed += m_c * (out_b + in_b)
+
+    per_kind["total"] = sum(per_kind[k] for k in _COLLECTIVES)
+    return {
+        "flops": flops,
+        "bytes_accessed": bytes_accessed,
+        "collectives": per_kind,
+        "collective_counts": counts,
+        "multiplicities": {c: m for c, m in mult.items() if m > 1.0},
+    }
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum operand bytes per collective kind over the partitioned module.
+
+    Operand sizes are looked up from each instruction's definition site;
+    for ops whose operands are constants/parameters inline we fall back to
+    the op's own output bytes (equal for all-reduce/permute; a lower bound
+    for all-gather).
+    """
+    shapes: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name = m.group(1).lstrip("%")
+        rhs = m.group(2)
+        # the type annotation is the first shape-looking token on the rhs
+        tm = _SHAPE_RE.search(rhs.split("(", 1)[0])
+        if tm is not None or "(" in rhs:
+            shapes[name] = _shape_bytes(rhs.split("(", 1)[0])
+
+    per_kind = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _DEF_RE.match(stripped)
+        if not m:
+            continue
+        rhs = m.group(2)
+        opm = re.search(r"\b([a-z0-9\-]+)\(", rhs)
+        if not opm:
+            continue
+        op = opm.group(1)
+        kind = next((k for k in _COLLECTIVES
+                     if op == k or op.startswith(k + "-")), None)
+        if kind is None:
+            continue
+        counts[kind] += 1
+        args_str = rhs.split("(", 1)[1]
+        operand_names = re.findall(r"%?([\w.\-]+)", args_str.split(")")[0])
+        got = 0
+        for on in operand_names:
+            if on in shapes:
+                got += shapes[on]
+        if got == 0:
+            got = _shape_bytes(rhs.split("(", 1)[0])
+        per_kind[kind] += got
+    per_kind["total"] = sum(per_kind[k] for k in _COLLECTIVES)
+    per_kind["counts"] = counts
+    return per_kind
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float                # whole-job FLOPs (cost_analysis * chips?)
+    hlo_bytes: float
+    collective_bytes_per_chip: float
+    collective_detail: dict
+    compute_term: float
+    memory_term: float
+    collective_term: float
+    model_flops: float              # 6*N*D (active params) per step
+    memory_per_chip: dict
+    fits: bool
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_term, "memory": self.memory_term,
+                 "collective": self.collective_term}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How close the dominant term is to being the *only* cost: the
+        achievable fraction of the compute roofline if perfectly
+        overlapped = compute_term / max(all terms)."""
+        worst = max(self.compute_term, self.memory_term,
+                    self.collective_term)
+        return self.compute_term / worst if worst else 0.0
+
+    def to_dict(self):
+        d = dataclasses.asdict(self)
+        d["bottleneck"] = self.bottleneck
+        d["useful_flops_ratio"] = self.useful_flops_ratio
+        d["roofline_fraction"] = self.roofline_fraction
+        return d
+
+
+def roofline_from_compiled(compiled, *, arch: str, shape: str,
+                           mesh_desc: str, chips: int, model_flops: float,
+                           hbm_limit: float = 16 * 2**30) -> RooflineReport:
+    # Trip-count-aware analysis of the partitioned module (XLA's own
+    # cost_analysis counts scan bodies once — useless for layer-scanned
+    # production programs).  All analyzer numbers are per-device.
+    an = analyze_hlo(compiled.as_text())
+    hlo_flops_total = an["flops"] * chips
+    hlo_bytes_total = an["bytes_accessed"] * chips
+    coll = dict(an["collectives"])
+    coll["counts"] = an["collective_counts"]
+    mem = compiled.memory_analysis()
+    mem_per_chip = {
+        "arguments": int(getattr(mem, "argument_size_in_bytes", 0)),
+        "outputs": int(getattr(mem, "output_size_in_bytes", 0)),
+        "temps": int(getattr(mem, "temp_size_in_bytes", 0)),
+        "peak": int(getattr(mem, "peak_memory_in_bytes", 0) or 0),
+    }
+    # arguments are donated into outputs for train steps; peak residency is
+    # max(args, outputs) + temps as a conservative bound
+    resident = max(mem_per_chip["arguments"], mem_per_chip["outputs"]) \
+        + mem_per_chip["temps"]
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_desc, chips=chips,
+        hlo_flops=hlo_flops_total, hlo_bytes=hlo_bytes_total,
+        collective_bytes_per_chip=float(coll["total"]),
+        collective_detail=coll,
+        compute_term=hlo_flops_total / (chips * V5E_PEAK_BF16),
+        memory_term=hlo_bytes_total / (chips * V5E_HBM_BW),
+        collective_term=coll["total"] / V5E_ICI_BW,
+        model_flops=model_flops,
+        memory_per_chip=mem_per_chip,
+        fits=resident <= hbm_limit,
+    )

@@ -1,0 +1,72 @@
+"""Multi-device correctness checks, run in a subprocess with 8 forced host
+devices (the main pytest process must keep the default single device).
+
+Usage: python tests/_multidevice_main.py
+Exits 0 iff every distributed runner matches the single-device oracle.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import stencils  # noqa: E402
+from repro.core import distribute  # noqa: E402
+from repro.core.model import ParallelismConfig  # noqa: E402
+from repro.kernels import ref  # noqa: E402
+
+
+def check(name, spec, cfg, arrays, iters, rtol=2e-4):
+    want = np.asarray(ref.stencil_iterations_ref(spec, arrays, iters))
+    run = distribute.build_runner(spec, cfg, iterations=iters, tile_rows=16)
+    got = run(arrays)
+    np.testing.assert_allclose(got, want, rtol=rtol, atol=rtol, err_msg=name)
+    print(f"OK {name}")
+
+
+def main():
+    assert jax.device_count() == 8, jax.device_count()
+    rng = np.random.default_rng(7)
+    cases = []
+    for bench in ["jacobi2d", "hotspot", "dilate", "blur_jacobi2d"]:
+        cases.append((bench, (96, 20), 4))
+        cases.append((bench, (70, 13), 6))   # ragged rows
+    for bench in ["heat3d", "jacobi3d"]:
+        cases.append((bench, (64, 6, 6), 4))
+
+    for bench, shape, iters in cases:
+        spec = stencils.get(bench, shape=shape, iterations=iters)
+        arrays = {
+            n: jnp.asarray(rng.standard_normal(shp).astype(dt))
+            for n, (dt, shp) in spec.inputs.items()
+        }
+        for cfg in [
+            ParallelismConfig("spatial_s", k=4, s=1),
+            ParallelismConfig("spatial_s", k=8, s=1),
+            ParallelismConfig("spatial_r", k=2, s=1),
+            ParallelismConfig("hybrid_s", k=4, s=2),
+            ParallelismConfig("hybrid_s", k=2, s=3),
+            ParallelismConfig("hybrid_r", k=2, s=2),
+            ParallelismConfig("temporal", k=1, s=4),
+            ParallelismConfig("temporal", k=1, s=3),  # iter not divisible
+        ]:
+            if cfg.variant in ("spatial_r", "hybrid_r"):
+                R_k = -(-shape[0] // cfg.k)
+                if iters * spec.radius > R_k:
+                    continue
+            check(f"{bench}{shape} it={iters} {cfg.variant}(k={cfg.k},s={cfg.s})",
+                  spec, cfg, arrays, iters)
+
+    print("ALL MULTIDEVICE CHECKS PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Multi-device distribution correctness (subprocess: 8 forced host devices).
+
+The main pytest process keeps the default single device (smoke tests and
+benchmarks must see 1 device), so the shard_map equivalence checks run in a
+child process with XLA_FLAGS=--xla_force_host_platform_device_count=8.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_all_parallelisms_match_oracle_on_8_devices():
+    script = os.path.join(os.path.dirname(__file__), "_multidevice_main.py")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, script],
+        capture_output=True, text=True, timeout=900, env=env,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"multidevice checks failed\nstdout:\n{proc.stdout[-4000:]}\n"
+            f"stderr:\n{proc.stderr[-4000:]}"
+        )
+    assert "ALL MULTIDEVICE CHECKS PASSED" in proc.stdout

@@ -1,0 +1,66 @@
+"""Dry-run machinery gate: lower+compile a small arch on a small forced
+mesh in a subprocess (the full 512-device sweep runs via
+scripts/run_dryrun_cells.sh; this test keeps the machinery from rotting).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["REPRO_DRYRUN_DEVICES"] = "512"
+import json
+from repro.launch import dryrun
+
+res = dryrun.lower_cell("mamba2_130m", "decode_32k", verbose=False)
+assert res.status == "ok", res
+rep = res.report
+assert rep["fits"], rep["memory_per_chip"]
+assert rep["compute_term"] > 0 and rep["memory_term"] > 0
+res2 = dryrun.lower_cell("internlm2_1_8b", "decode_32k", multi_pod=True,
+                         verbose=False)
+assert res2.status == "ok", res2
+print("DRYRUN_MACHINERY_OK")
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_lowers_and_compiles_small_cells():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        timeout=1200, env=env)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "DRYRUN_MACHINERY_OK" in proc.stdout
+
+
+def test_guard_spec_and_plan_rules():
+    """Pure-python guard logic (no devices needed)."""
+    import numpy as np
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.launch import sharding as shlib
+
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    # duplicate axes are deduped, first occurrence wins
+    spec = shlib.guard_spec((8, 16, 32),
+                            P("model", "data", "model"), mesh)
+    assert spec == P("model", "data", None)
+    # non-divisible dims fall back to replication
+    mesh16 = jax.sharding.Mesh(
+        np.array(jax.devices() * 1).reshape(1, 1), ("data", "model"))
+    spec = shlib.guard_spec((7,), P("model"), mesh16)
+    assert spec == P("model")  # axis size 1 divides everything
+
+    plan = shlib.DEFAULT_PLAN
+    assert plan.rule("expert") == "model"
+    # embed carries FSDP over data AND pod (guard drops "pod" when absent)
+    assert shlib.logical_to_spec(("expert", "embed", "mlp"), plan) == \
+        ["model", ("data", "pod"), "model"]

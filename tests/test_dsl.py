@@ -1,0 +1,110 @@
+"""DSL parser tests, including the paper's own listings 2-4."""
+import pytest
+
+from repro.core import dsl
+from repro.core.spec import BinOp, Call, Num, Ref
+
+LISTING2 = """
+kernel: JACOBI2D
+iteration: 4
+input float: in_1(9720, 1024)
+output float: out_1(0,0) = ( in_1(0,1) + in_1(1,0) + in_1(0,0) + in_1(0,-1) + in_1(-1,0) ) / 5
+"""
+
+LISTING3 = """
+kernel: HOTSPOT
+iteration: 64
+input float: in_1(9720, 1024)
+input float: in_2(9720, 1024)
+output float: out_1(0,0) = 1.296 * ((in_2(-1,0) + in_2(1,0) - in_2(0,0) + in_2(0,0)) * 0.949219
+    + in_1(-1,0) + (in_2(0,-1) + in_2(0,1) - in_2(0,0) + in_2(0,0)) * 0.010535
+    + (80 - in_2(0,0)) * 0.00000514403)
+"""
+
+LISTING4 = """
+kernel: BLUR-JACOBI2D
+iteration: 4
+input float: in(9720, 1024)
+local float: temp(0,0) = (in(-1,0) + in(-1,1) + in(-1,2) + in(0,0) + in(0,1) + in(0,2) + in(1,0) + in(1,1) + in(1,2)) / 9
+output float: out(0,0) = (temp(0,1) + temp(1,0) + temp(0,0) + temp(0,-1) + temp(-1,0)) / 5
+"""
+
+
+def test_listing2_jacobi2d():
+    spec = dsl.parse(LISTING2)
+    assert spec.name == "JACOBI2D"
+    assert spec.iterations == 4
+    assert spec.shape == (9720, 1024)
+    assert spec.radius == 1 and spec.halo == 2
+    assert spec.iterate_input == "in_1"
+    assert spec.points == 5
+    assert isinstance(spec.output_stage.expr, BinOp)
+    assert spec.output_stage.expr.op == "/"
+
+
+def test_listing3_hotspot_two_inputs():
+    spec = dsl.parse(LISTING3)
+    assert spec.num_inputs == 2
+    assert spec.iterate_input == "in_2"  # default: last declared input
+    assert spec.iterations == 64
+    refs = {r.name for s in spec.stages for r in
+            __import__("repro.core.spec", fromlist=["refs_in"]).refs_in(s.expr)}
+    assert refs == {"in_1", "in_2"}
+
+
+def test_listing4_two_loops_local():
+    spec = dsl.parse(LISTING4)
+    assert spec.name == "BLUR-JACOBI2D"
+    assert len(spec.stages) == 2
+    assert not spec.stages[0].is_output and spec.stages[1].is_output
+    # composite radius: blur reaches offset 2, jacobi adds 1
+    assert spec.stages[0].radius == 2 and spec.stages[1].radius == 1
+    assert spec.radius == 3
+
+
+def test_3d_and_intrinsics():
+    spec = dsl.parse("""
+kernel: T3D
+iteration: 2
+input float: x(16, 8, 8)
+output float: y(0,0,0) = max(x(0,0,0), x(1,0,0), abs(x(-1,0,0)))
+""")
+    assert spec.ndim == 3
+    assert spec.cols_flat == 64
+    assert isinstance(spec.output_stage.expr, Call)
+
+
+def test_iterate_directive():
+    spec = dsl.parse("""
+kernel: K
+iteration: 2
+iterate: a
+input float: a(8, 8)
+input float: b(8, 8)
+output float: o(0,0) = a(0,0) + b(0,0)
+""")
+    assert spec.iterate_input == "a"
+
+
+@pytest.mark.parametrize("bad", [
+    "iteration: 4",                                     # no kernel
+    "kernel: K\ninput float: a(8,8)",                   # no output
+    "kernel: K\ninput float: a(8,8)\noutput float: o(0,0) = q(0,0)",  # unknown ref
+    "kernel: K\ninput float: a(8,8)\noutput float: o(0) = a(0,0)",    # arity
+])
+def test_rejects_malformed(bad):
+    with pytest.raises((SyntaxError, ValueError)):
+        dsl.parse(bad)
+
+
+def test_scientific_notation_constants():
+    spec = dsl.parse("""
+kernel: SCI
+iteration: 1
+input float: a(8, 8)
+output float: o(0,0) = a(0,0) * 5.14403e-6 + 1e2
+""")
+    nums = [n.value for s in spec.stages
+            for n in __import__("repro.core.spec", fromlist=["walk"]).walk(s.expr)
+            if isinstance(n, Num)]
+    assert 5.14403e-6 in nums and 100.0 in nums

@@ -1,0 +1,17 @@
+"""Expert-parallel shard_map MoE dispatch equivalence (subprocess, 8 dev)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_ep_moe_matches_dense_dispatch():
+    script = os.path.join(os.path.dirname(__file__), "_ep_moe_main.py")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, script], capture_output=True,
+                          text=True, timeout=600, env=env)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "EP_MOE_OK" in proc.stdout

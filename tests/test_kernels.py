@@ -1,0 +1,87 @@
+"""Per-kernel validation: Pallas fused stencil vs. the pure-jnp oracle.
+
+Sweeps shapes, dtypes, fusion depths, and tile sizes for every benchmark
+kernel; pallas_call runs in interpret mode (kernel body executed on CPU).
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.configs import stencils
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def make_arrays(spec, scale=1.0):
+    out = {}
+    for name, (dtype, shape) in spec.inputs.items():
+        a = (RNG.standard_normal(shape) * scale).astype(dtype)
+        out[name] = jnp.asarray(a)
+    return out
+
+
+def tol(dtype):
+    # fp32 reassociation across fused iterations (HOTSPOT amplifies ~1.3x/iter)
+    return dict(rtol=2e-4, atol=2e-4) if dtype == "float32" else dict(rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("name", list(stencils.BENCHMARKS))
+@pytest.mark.parametrize("iters,s", [(1, 1), (3, 1), (4, 2), (5, 4)])
+def test_pallas_matches_ref(name, iters, s):
+    shape = (24, 6, 6) if name in stencils.BENCHMARKS_3D else (24, 17)
+    spec = stencils.get(name, shape=shape, iterations=iters)
+    arrays = make_arrays(spec)
+    want = ref.stencil_iterations_ref(spec, arrays, iters)
+    got = ops.stencil_run(
+        spec, arrays, iters, s=s, tile_rows=8, backend="pallas"
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol(spec.dtype))
+
+
+@pytest.mark.parametrize("name", ["jacobi2d", "hotspot", "dilate", "blur_jacobi2d"])
+@pytest.mark.parametrize("shape", [(7, 5), (16, 16), (33, 9), (64, 128)])
+def test_pallas_shape_sweep(name, shape):
+    spec = stencils.get(name, shape=shape, iterations=2)
+    arrays = make_arrays(spec)
+    want = ref.stencil_iterations_ref(spec, arrays, 2)
+    got = ops.stencil_run(spec, arrays, 2, s=2, tile_rows=8, backend="pallas")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol(spec.dtype))
+
+
+@pytest.mark.parametrize("align", [1, 128])
+def test_pallas_col_alignment(align):
+    spec = stencils.jacobi2d(shape=(32, 50), iterations=3)
+    arrays = make_arrays(spec)
+    want = ref.stencil_iterations_ref(spec, arrays, 3)
+    got = ops.stencil_run(
+        spec, arrays, 3, s=3, tile_rows=16, backend="pallas", align_cols=align
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol(spec.dtype))
+
+
+@pytest.mark.parametrize("name", list(stencils.BENCHMARKS))
+@pytest.mark.parametrize("s", [1, 2, 4, 7])
+def test_fused_jnp_matches_ref(name, s):
+    shape = (20, 5, 7) if name in stencils.BENCHMARKS_3D else (20, 13)
+    spec = stencils.get(name, shape=shape, iterations=7)
+    arrays = make_arrays(spec)
+    want = ref.stencil_iterations_ref(spec, arrays, 7)
+    got = ops.stencil_run(spec, arrays, 7, s=s, backend="jnp")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol(spec.dtype))
+
+
+def test_bfloat16_kernel():
+    import repro.core.dsl as dsl
+    spec = dsl.parse("""
+kernel: J2D_BF16
+iteration: 2
+input bfloat16: x(16, 24)
+output bfloat16: y(0,0) = (x(0,1) + x(1,0) + x(0,0) + x(0,-1) + x(-1,0)) / 5
+""")
+    arrays = {"x": jnp.asarray(RNG.standard_normal((16, 24)), dtype=jnp.bfloat16)}
+    want = ref.stencil_iterations_ref(spec, arrays, 2).astype(jnp.float32)
+    got = ops.stencil_run(spec, arrays, 2, s=2, tile_rows=8, backend="pallas")
+    np.testing.assert_allclose(
+        np.asarray(got, dtype=np.float32), np.asarray(want), rtol=3e-2, atol=3e-2
+    )

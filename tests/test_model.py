@@ -1,0 +1,111 @@
+"""Analytical model tests: paper-exact FPGA model (Eqs. 1-9) + TPU model."""
+import math
+
+import pytest
+
+from repro.configs import stencils
+from repro.core import model
+from repro.core.model import ParallelismConfig
+from repro.core.platform import DEFAULT_FPGA, DEFAULT_TPU
+
+# Paper-reported resource-bound PE counts (Figs. 18-20, column size 1024)
+PAPER_PE = {
+    "jacobi2d": 21, "jacobi3d": 15, "blur": 12, "seidel2d": 12,
+    "dilate": 18, "hotspot": 9, "heat3d": 12, "sobel2d": 12,
+}
+# Paper Table 3: best parallelism at iteration=64, input 9720x1024
+PAPER_TABLE3_IT64 = {
+    "jacobi2d": ("hybrid_s", 3, 7), "jacobi3d": ("hybrid_s", 3, 5),
+    "blur": ("hybrid_s", 3, 4), "seidel2d": ("hybrid_s", 3, 4),
+    "dilate": ("hybrid_s", 3, 6), "hotspot": ("hybrid_s", 3, 3),
+    "heat3d": ("hybrid_s", 3, 4), "sobel2d": ("hybrid_s", 3, 4),
+}
+
+
+def _spec(name, it):
+    shape = (9720, 32, 32) if name in stencils.BENCHMARKS_3D else (9720, 1024)
+    return stencils.get(name, shape=shape, iterations=it)
+
+
+@pytest.mark.parametrize("name", sorted(PAPER_TABLE3_IT64))
+def test_reproduces_paper_table3_iter64(name):
+    """With the paper's synthesizer PE counts, Eq. 9 reproduces Table 3."""
+    spec = _spec(name, 64)
+    best = model.choose_best(
+        spec, DEFAULT_FPGA, pe_res_override=PAPER_PE[name]
+    )[0]
+    got = (best.config.variant, best.config.k, best.config.s)
+    assert got == PAPER_TABLE3_IT64[name]
+
+
+def test_eq4_temporal_latency_exact():
+    spec = _spec("jacobi2d", 64)
+    cfg = ParallelismConfig("temporal", k=1, s=8)
+    pred = model.predict_fpga(spec, cfg, DEFAULT_FPGA)
+    R, C, U, d = 9720, 1024, 16, 2
+    cycles = math.ceil((R + d * 7) * C / U) * math.ceil(64 / 8)
+    assert pred.latency == pytest.approx(cycles / DEFAULT_FPGA.freq_hz)
+
+
+def test_eq2_bandwidth_bound():
+    # JACOBI2D: 2 banks per PE over 30 usable banks -> 15
+    assert model.fpga_pe_bw(_spec("jacobi2d", 4), DEFAULT_FPGA) == 15
+    # HOTSPOT: 3 banks per PE -> 10
+    assert model.fpga_pe_bw(_spec("hotspot", 4), DEFAULT_FPGA) == 10
+
+
+def test_spatial_s_linear_in_iter_spatial_r_superlinear():
+    """Paper observation 1 (Sec. 4.2): L_ss grows exactly linearly with
+    iter, L_sr slightly more than linearly."""
+    spec1, spec8 = _spec("blur", 8), _spec("blur", 64)
+    k = 12
+    lss_1 = model.predict_fpga(spec1, ParallelismConfig("spatial_s", k=k), DEFAULT_FPGA).latency
+    lss_8 = model.predict_fpga(spec8, ParallelismConfig("spatial_s", k=k), DEFAULT_FPGA).latency
+    assert lss_8 == pytest.approx(8 * lss_1, rel=1e-6)
+    lsr_1 = model.predict_fpga(spec1, ParallelismConfig("spatial_r", k=k), DEFAULT_FPGA).latency
+    lsr_8 = model.predict_fpga(spec8, ParallelismConfig("spatial_r", k=k), DEFAULT_FPGA).latency
+    assert lsr_8 > 8 * lsr_1
+
+
+def test_tpu_fusion_reduces_memory_term():
+    spec = _spec("jacobi2d", 16)
+    tpu = DEFAULT_TPU.with_chips(8)
+    p1 = model.predict_tpu(spec, ParallelismConfig("hybrid_s", k=8, s=1), tpu)
+    p4 = model.predict_tpu(spec, ParallelismConfig("hybrid_s", k=8, s=4), tpu)
+    assert p4.memory_term < p1.memory_term / 2
+    assert p4.flops > p1.flops  # trapezoid redundancy is the price
+
+
+def test_tpu_spatial_s_collective_scales_with_iter():
+    spec16, spec64 = _spec("jacobi2d", 16), _spec("jacobi2d", 64)
+    tpu = DEFAULT_TPU.with_chips(8)
+    c16 = model.predict_tpu(spec16, ParallelismConfig("spatial_s", k=8), tpu)
+    c64 = model.predict_tpu(spec64, ParallelismConfig("spatial_s", k=8), tpu)
+    assert c64.collective_bytes == pytest.approx(4 * c16.collective_bytes)
+
+
+def test_tpu_candidates_respect_halo_constraint():
+    spec = _spec("jacobi2d", 64)
+    tpu = DEFAULT_TPU.with_chips(256)
+    for pred in model.choose_best(spec, tpu):
+        cfg = pred.config
+        if cfg.variant in ("spatial_r", "hybrid_r") and cfg.k > 1:
+            assert 64 * spec.radius <= math.ceil(9720 / cfg.k)
+
+
+def test_vmem_limit_monotone_in_tile():
+    spec = _spec("blur", 64)
+    s_small = model.vmem_fusion_limit(spec, DEFAULT_TPU, 128)
+    s_large = model.vmem_fusion_limit(spec, DEFAULT_TPU, 2048)
+    assert s_small >= s_large >= 1
+
+
+def test_best_config_beats_soda_at_low_iter():
+    """The paper's headline: hybrid/spatial beats temporal-only at low iter."""
+    spec = _spec("jacobi2d", 1)
+    tpu = DEFAULT_TPU.with_chips(8)
+    ranked = model.choose_best(spec, tpu)
+    best = ranked[0]
+    temporal = [p for p in ranked if p.config.variant == "temporal"][0]
+    assert temporal.latency / best.latency > 3.0
+    assert best.config.k > 1

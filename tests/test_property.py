@@ -1,0 +1,106 @@
+"""Property-based tests (hypothesis) over the system's invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import stencils
+from repro.core import dsl, model
+from repro.core.model import ParallelismConfig
+from repro.core.platform import DEFAULT_TPU
+from repro.kernels import ops, ref
+
+
+@st.composite
+def grids(draw, min_side=4, max_side=24):
+    r = draw(st.integers(min_side, max_side))
+    c = draw(st.integers(min_side, max_side))
+    return (r, c)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=grids(), iters=st.integers(1, 5), seed=st.integers(0, 2**31 - 1))
+def test_linearity_of_linear_stencils(shape, iters, seed):
+    """JACOBI2D is linear: F(a*x + b*y) == a*F(x) + b*F(y)."""
+    spec = stencils.jacobi2d(shape=shape, iterations=iters)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+    a, b = 2.0, -0.5
+    lhs = ref.stencil_iterations_ref(spec, {"in_1": a * x + b * y}, iters)
+    rhs = a * ref.stencil_iterations_ref(spec, {"in_1": x}, iters) + \
+        b * ref.stencil_iterations_ref(spec, {"in_1": y}, iters)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=grids(8, 20), iters=st.integers(1, 6),
+       s=st.integers(1, 6), seed=st.integers(0, 2**31 - 1))
+def test_fusion_depth_invariance(shape, iters, s, seed):
+    """Fused execution must be independent of the fusion depth s."""
+    spec = stencils.blur(shape=shape, iterations=iters)
+    rng = np.random.default_rng(seed)
+    arrays = {"in_1": jnp.asarray(rng.standard_normal(shape).astype(np.float32))}
+    want = ref.stencil_iterations_ref(spec, arrays, iters)
+    got = ops.stencil_run(spec, arrays, iters, s=s, backend="jnp")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=grids(6, 16), seed=st.integers(0, 2**31 - 1))
+def test_dilate_monotone_and_idempotent_on_flat(shape, seed):
+    """max-stencil invariants: output >= centre input (for >=0 inputs)."""
+    spec = stencils.dilate(shape=shape, iterations=1)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(np.abs(rng.standard_normal(shape)).astype(np.float32))
+    out = ref.stencil_iterations_ref(spec, {"in_1": x}, 1)
+    assert bool(jnp.all(out >= x))
+
+
+@settings(max_examples=30, deadline=None)
+@given(it=st.integers(1, 64), chips=st.sampled_from([1, 4, 8, 16, 64, 256]))
+def test_model_latency_positive_and_bounded(it, chips):
+    spec = stencils.jacobi2d(shape=(4096, 1024), iterations=it)
+    tpu = DEFAULT_TPU.with_chips(chips)
+    preds = model.choose_best(spec, tpu)
+    assert preds, "candidate set must never be empty"
+    for p in preds:
+        assert p.latency > 0 and np.isfinite(p.latency)
+        assert p.compute_term >= 0 and p.memory_term > 0
+        assert p.rounds >= 1
+    # more chips can never make the best latency worse
+    if chips > 1:
+        solo = model.choose_best(spec, DEFAULT_TPU.with_chips(1))[0]
+        assert preds[0].latency <= solo.latency * 1.01
+
+
+@settings(max_examples=25, deadline=None)
+@given(it=st.integers(1, 64))
+def test_intensity_linear_in_iterations(it):
+    """Fig. 1b: computation intensity grows linearly with iterations."""
+    spec = stencils.jacobi2d(iterations=it)
+    assert spec.computation_intensity(it) == it * spec.computation_intensity(1)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), shape=grids(6, 14))
+def test_dsl_roundtrip_semantics(seed, shape):
+    """Parsing an equivalent DSL permutation yields identical semantics."""
+    rng = np.random.default_rng(seed)
+    a = dsl.parse(f"""
+kernel: A
+iteration: 2
+input float: x({shape[0]}, {shape[1]})
+output float: o(0,0) = x(0,1) + x(1,0) * 2
+""")
+    b = dsl.parse(f"""
+kernel: B
+iteration: 2
+input float: x({shape[0]}, {shape[1]})
+output float: o(0,0) = (2 * x(1,0)) + x(0,1)
+""")
+    arrays = {"x": jnp.asarray(rng.standard_normal(shape).astype(np.float32))}
+    np.testing.assert_allclose(
+        np.asarray(ref.stencil_iterations_ref(a, arrays, 2)),
+        np.asarray(ref.stencil_iterations_ref(b, arrays, 2)),
+        rtol=1e-5, atol=1e-5,
+    )

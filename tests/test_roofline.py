@@ -1,0 +1,71 @@
+"""Roofline HLO analyzer: trip-count scaling, dot FLOPs, collective bytes."""
+import numpy as np
+
+from repro.roofline.analysis import (analyze_hlo, collective_bytes_from_hlo,
+                                     _shape_bytes)
+
+SYNTH = """\
+HloModule test, num_partitions=4
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16] get-tuple-element(%p), index=1
+  %w = f32[16,16] constant({...})
+  %d = f32[8,16] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16] all-reduce(%d), replica_groups={}
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]) tuple(%ni, %ar)
+}
+
+%cond (p2: (s32[], f32[8,16])) -> pred[] {
+  %p2 = (s32[], f32[8,16]) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %c = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i2, %c), direction=LT
+}
+
+ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,16]) tuple(%zero, %a)
+  %w2 = (s32[], f32[8,16]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  %res = f32[8,16] get-tuple-element(%w2), index=1
+  %ag = f32[32,16] all-gather(%res), dimensions={0}
+  %red = f32[8,16] slice(%ag), slice={[0:8], [0:16]}
+  ROOT %out = f32[8,16] add(%red, %res)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[8,16]") == 8 * 16 * 4
+    assert _shape_bytes("bf16[2,3]") == 12
+    assert _shape_bytes("(s32[], f32[8,16])") == 4 + 512
+    assert _shape_bytes("pred[10]") == 10
+
+
+def test_trip_count_scaling_of_dots_and_collectives():
+    an = analyze_hlo(SYNTH)
+    # dot: 2 * (8*16) * 16 = 4096 flops, x10 trips
+    assert an["flops"] == 10 * 2 * 8 * 16 * 16
+    # all-reduce inside loop: operand 512B x10; all-gather outside: 512B
+    assert an["collectives"]["all-reduce"] == 10 * 512
+    assert an["collectives"]["all-gather"] == 512
+    assert an["collective_counts"]["all-reduce"] == 10
+    assert an["collective_counts"]["all-gather"] == 1
+    # while body got multiplicity 10
+    assert an["multiplicities"].get("body") == 10.0
+
+
+def test_collective_bytes_flat_parser_consistent():
+    flat = collective_bytes_from_hlo(SYNTH)
+    # flat parser (no trip awareness) counts each op once
+    assert flat["all-reduce"] == 512
+    assert flat["all-gather"] == 512
+
+
+def test_bytes_accessed_positive_and_loop_scaled():
+    an = analyze_hlo(SYNTH)
+    assert an["bytes_accessed"] > 10 * 512  # loop body ops dominate
