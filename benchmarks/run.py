@@ -7,6 +7,8 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   parallelism_sweep  — Figs. 10-17 (GCell/s per parallelism x iteration)
   best_config        — Table 3 (best parallelism per benchmark)
   speedup_vs_soda    — Sec. 5.4 (SASA vs SODA headline speedups)
+  serving_throughput — runtime subsystem: cached+batched serving vs
+                       per-request autotune (grids/s vs batch size)
   lm_roofline        — assigned-arch roofline table from the dry-run
 """
 from __future__ import annotations
@@ -18,13 +20,14 @@ import traceback
 
 def main() -> None:
     from benchmarks import (best_config, intensity, lm_roofline,
-                            model_accuracy, parallelism_sweep, single_pe,
-                            speedup_vs_soda)
+                            model_accuracy, parallelism_sweep,
+                            serving_throughput, single_pe, speedup_vs_soda)
     modules = [
         ("intensity", intensity),
         ("single_pe", single_pe),
         ("best_config", best_config),
         ("speedup_vs_soda", speedup_vs_soda),
+        ("serving_throughput", serving_throughput),
         ("model_accuracy", model_accuracy),
         ("parallelism_sweep", parallelism_sweep),
         ("lm_roofline", lm_roofline),

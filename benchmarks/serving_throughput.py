@@ -1,0 +1,109 @@
+"""Serving-path throughput: cached batched dispatch vs per-request autotune.
+
+The acceptance experiment for the runtime subsystem, on a 2D Jacobi
+workload:
+
+  * **baseline** — the pre-runtime flow: every request runs ``autotune``
+    (re-ranking the design space and re-jitting the executor) and then the
+    grid.  This is what "serve a stencil" cost before the design cache.
+  * **served** — one ``StencilServer.register`` (autotune + compile +
+    warmup, all through the ``DesignCache``), then micro-batched dispatch
+    at several batch sizes; reports grids/sec vs batch size.
+  * **cache check** — a second identical register on the shared cache must
+    be a pure hit (no re-rank, no re-jit).
+
+Run directly (``PYTHONPATH=src python benchmarks/serving_throughput.py``)
+it asserts the >=5x speedup and the second-call cache hit, exiting
+non-zero on regression; under the harness (``benchmarks/run.py``) it just
+emits CSV rows.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import autotune
+from repro.core.dsl import parse
+from repro.runtime import DesignCache
+from repro.serve import StencilRequest, StencilServer
+
+DSL = """
+kernel: JACOBI2D_SERVE
+iteration: 8
+input float: in_1(256, 128)
+output float: out_1(0,0) = (in_1(0,1) + in_1(1,0) + in_1(0,0)
+    + in_1(0,-1) + in_1(-1,0)) / 5
+"""
+
+N_REQUESTS = 8
+BATCH_SIZES = (1, 2, 4, 8)
+
+
+def _requests(spec, n, rng):
+    return [
+        StencilRequest("jacobi2d", {
+            name: rng.standard_normal(shape).astype(dt)
+            for name, (dt, shape) in spec.inputs.items()
+        })
+        for _ in range(n)
+    ]
+
+
+def run(check: bool = False):
+    rows = []
+    spec = parse(DSL)
+    rng = np.random.default_rng(0)
+    reqs = _requests(spec, N_REQUESTS, rng)
+
+    # ---- baseline: autotune + run per request (no cache, no batching) ----
+    t0 = time.perf_counter()
+    for req in reqs:
+        design = autotune(spec)
+        design.runner(req.arrays)
+    baseline_s = time.perf_counter() - t0
+    baseline_gps = N_REQUESTS / baseline_s
+    emit(rows, "serving/baseline_autotune_per_req",
+         baseline_s / N_REQUESTS * 1e6, f"{baseline_gps:.1f} grids/s")
+
+    # ---- served: one cached design, micro-batched dispatch ----
+    cache = DesignCache()
+    best_gps = 0.0
+    for bs in BATCH_SIZES:
+        srv = StencilServer(max_batch=bs, cache=cache)
+        srv.register("jacobi2d", spec)      # first bs: build; rest: cache hit
+        t0 = time.perf_counter()
+        srv.serve(reqs)
+        served_s = time.perf_counter() - t0
+        gps = N_REQUESTS / served_s
+        best_gps = max(best_gps, gps)
+        st = srv.stats()["jacobi2d"]
+        emit(rows, f"serving/batched_bs{bs}", served_s / N_REQUESTS * 1e6,
+             f"{gps:.1f} grids/s; {st['batches']} batches; "
+             f"cache_hit={st['cache_hit']}")
+
+    speedup = best_gps / baseline_gps
+    emit(rows, "serving/speedup_vs_per_req_autotune", 0.0, f"{speedup:.1f}x")
+
+    # ---- second identical serve call: must be a pure design-cache hit ----
+    srv2 = StencilServer(max_batch=BATCH_SIZES[-1], cache=cache)
+    reg2 = srv2.register("jacobi2d", spec)
+    srv2.serve(_requests(spec, 4, rng))
+    emit(rows, "serving/second_call_cache_hit", 0.0,
+         f"hit={reg2.counters.cache_hit}; "
+         f"build_s={reg2.counters.build_time_s:.3f}")
+
+    if check:
+        assert speedup >= 5.0, (
+            f"serving speedup {speedup:.1f}x < 5x over per-request autotune"
+        )
+        assert reg2.counters.cache_hit, "second serve call missed the cache"
+        assert reg2.counters.build_time_s == 0.0, "cache hit recompiled"
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(check=True):
+        print(row)
+    print("OK: >=5x over per-request autotune; second call hit the cache")

@@ -1,0 +1,27 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: full test suite + CPU smoke of the end-to-end flows.
+#
+# Usage: scripts/ci.sh [fast]
+#   fast: skip the `slow`-marked multi-device subprocess tests.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+MARK=()
+if [[ "${1:-}" == "fast" ]]; then
+  MARK=(-m "not slow")
+fi
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q "${MARK[@]}"
+
+echo "== smoke: examples/quickstart.py =="
+python examples/quickstart.py
+
+echo "== smoke: serving runtime (cache + batched dispatch) =="
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+  python benchmarks/serving_throughput.py
+
+echo "CI OK"

@@ -1,0 +1,149 @@
+"""Single-point jax version compatibility shim.
+
+Supported-version policy (see ROADMAP.md): the repo pins the oldest
+supported toolchain, **jax 0.4.37**, and tracks newer jax releases by
+feature-detecting the handful of APIs that moved or were renamed since.
+Everything version-sensitive is funnelled through this module so a jax
+upgrade is a one-file change; no other module may import `shard_map`,
+query an axis size, or build an element-indexed Pallas ``BlockSpec``
+directly.
+
+Shimmed surface:
+
+  =====================  ==========================  =======================
+  name                   jax >= 0.6 spelling         jax 0.4.37 spelling
+  =====================  ==========================  =======================
+  ``shard_map``          ``jax.shard_map``           ``jax.experimental.
+                                                     shard_map.shard_map``
+  ``axis_size(name)``    ``lax.axis_size(name)``     ``lax.psum(1, name)``
+                                                     (constant-folded to a
+                                                     Python int)
+  ``pvary(x, names)``    ``lax.pcast(x, names,       identity (0.4.x rep
+                         to="varying")``             tracking degrades loop
+                                                     carries automatically)
+  ``element_block_spec`` ``pl.BlockSpec`` with       ``pl.BlockSpec(...,
+                         ``pl.Element`` dims         indexing_mode=
+                                                     pl.Unblocked())``
+  =====================  ==========================  =======================
+"""
+from __future__ import annotations
+
+import re
+from typing import Callable, Sequence
+
+import jax
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _parse_version(v: str) -> tuple[int, ...]:
+    return tuple(int(x) for x in re.findall(r"\d+", v)[:3])
+
+
+JAX_VERSION: tuple[int, ...] = _parse_version(jax.__version__)
+
+# Oldest toolchain the repo promises to run on (the pinned CI version).
+MIN_SUPPORTED_JAX: tuple[int, ...] = (0, 4, 37)
+
+
+# --------------------------------------------------------------------------
+# shard_map: jax.shard_map (>=0.6) vs jax.experimental.shard_map (0.4.x)
+# --------------------------------------------------------------------------
+
+try:
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x / 0.5.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SHARD_MAP_KWARGS = None
+
+
+def shard_map(f=None, **kwargs):
+    """`shard_map` with the replication-check flag name normalised.
+
+    Newer jax renamed ``check_rep`` to ``check_vma``; callers may pass
+    either and the one the installed jax understands is forwarded.
+    """
+    global _SHARD_MAP_KWARGS
+    if _SHARD_MAP_KWARGS is None:
+        import inspect
+
+        _SHARD_MAP_KWARGS = frozenset(
+            inspect.signature(_shard_map).parameters
+        )
+    check = kwargs.pop("check_vma", kwargs.pop("check_rep", None))
+    if check is not None:
+        name = "check_vma" if "check_vma" in _SHARD_MAP_KWARGS else "check_rep"
+        kwargs[name] = check
+    if f is None:
+        return lambda g: _shard_map(g, **kwargs)
+    return _shard_map(f, **kwargs)
+
+
+# --------------------------------------------------------------------------
+# axis_size: lax.axis_size appeared after 0.4.37
+# --------------------------------------------------------------------------
+
+if hasattr(lax, "axis_size"):
+
+    def axis_size(axis_name: str) -> int:
+        """Size of a mapped mesh axis, as a concrete Python int."""
+        return lax.axis_size(axis_name)
+
+else:
+
+    def axis_size(axis_name: str) -> int:
+        """Size of a mapped mesh axis, as a concrete Python int.
+
+        ``psum`` of a non-tracer constant is folded to ``constant *
+        axis_size`` at trace time, so this returns a plain int usable in
+        Python control flow (e.g. building ppermute tables).
+        """
+        return lax.psum(1, axis_name)
+
+
+# --------------------------------------------------------------------------
+# pvary: mark a value as device-varying for shard_map replication typing
+# --------------------------------------------------------------------------
+
+if hasattr(lax, "pcast"):
+
+    def pvary(x, axis_names: Sequence[str]):
+        """Cast ``x`` to device-varying along ``axis_names``."""
+        return lax.pcast(x, tuple(axis_names), to="varying")
+
+elif hasattr(lax, "pvary"):
+
+    def pvary(x, axis_names: Sequence[str]):
+        return lax.pvary(x, tuple(axis_names))
+
+else:
+
+    def pvary(x, axis_names: Sequence[str]):
+        """No-op on jax 0.4.x: shard_map's replication checker computes a
+        fixpoint over loop carries there, so pre-casting is unnecessary."""
+        return x
+
+
+# --------------------------------------------------------------------------
+# Element-indexed Pallas BlockSpec (overlapping input blocks)
+# --------------------------------------------------------------------------
+
+
+def element_block_spec(
+    block_shape: Sequence[int], index_map: Callable[..., tuple]
+) -> pl.BlockSpec:
+    """A ``BlockSpec`` whose ``index_map`` returns **element** offsets.
+
+    Blocked (default) indexing places block ``i`` at ``index_map(i) *
+    block_shape`` — it cannot express overlapping input windows (block
+    stride != block size), which the fused stencil kernel needs for its
+    halo rows.  Newer jax spells this ``pl.Element`` per dimension; jax
+    0.4.37 spells it ``indexing_mode=pl.Unblocked()``.
+    """
+    shape = tuple(int(n) for n in block_shape)
+    if hasattr(pl, "Element"):
+        return pl.BlockSpec(
+            tuple(pl.Element(n) for n in shape), index_map
+        )
+    return pl.BlockSpec(shape, index_map, indexing_mode=pl.Unblocked())

@@ -47,8 +47,25 @@ def autotune(
     devices=None,
     build: bool = True,
     tile_rows: int = 64,
+    cache=None,
 ) -> TunedDesign:
-    """The SASA entry point: DSL text (or parsed spec) -> optimized runner."""
+    """The SASA entry point: DSL text (or parsed spec) -> optimized runner.
+
+    Pass a :class:`repro.runtime.DesignCache` as ``cache`` to memoize both
+    the ranking and the jitted runner across calls (serving entry points
+    do this by default; repeated tuning of the same spec then costs a
+    dictionary lookup instead of a re-rank + re-jit).
+    """
+    if cache is not None:
+        if not build:
+            return cache.design(
+                source_or_spec, platform=platform, iterations=iterations,
+                devices=devices,
+            )
+        return cache.get_or_build(
+            source_or_spec, platform=platform, iterations=iterations,
+            devices=devices, tile_rows=tile_rows, batched=False,
+        ).design
     spec = (
         source_or_spec
         if isinstance(source_or_spec, StencilSpec)

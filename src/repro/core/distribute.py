@@ -36,8 +36,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
 
+from repro.compat import axis_size, pvary, shard_map
 from repro.core.model import ParallelismConfig
 from repro.core.spec import StencilSpec
 from repro.kernels.blockops import fused_iterations_on_block
@@ -56,7 +56,7 @@ def exchange_halo(local: jnp.ndarray, h: int, axis: str = AXIS):
     Edge devices receive zeros (exterior-zero boundary for the global grid;
     padded-row shards are additionally handled by the grid mask).
     """
-    k = lax.axis_size(axis)
+    k = axis_size(axis)
     if k == 1 or h == 0:
         zeros = jnp.zeros((h,) + local.shape[1:], local.dtype)
         return zeros, zeros
@@ -202,10 +202,8 @@ def _temporal_pipeline_local(spec, iterations, grid_shape, tile_rows, k):
         tile_shape = (tile_rows + 2 * h,) + tuple(cur_global.shape[1:])
         # carries become device-varying after the first ppermute; mark the
         # initial zeros as varying so the fori_loop carry types match
-        out0 = lax.pcast(jnp.zeros_like(cur_global), (AXIS,), to="varying")
-        buf0 = lax.pcast(
-            jnp.zeros(tile_shape, cur_global.dtype), (AXIS,), to="varying"
-        )
+        out0 = pvary(jnp.zeros_like(cur_global), (AXIS,))
+        buf0 = pvary(jnp.zeros(tile_shape, cur_global.dtype), (AXIS,))
 
         def step(n, state):
             buf, out = state
@@ -239,7 +237,7 @@ def _temporal_pipeline_local(spec, iterations, grid_shape, tile_rows, k):
                 (safe_idx * tile_rows,) + (0,) * (spec.ndim - 1),
             )
             # stream the tile to the next stage
-            k_ = lax.axis_size(AXIS)
+            k_ = axis_size(AXIS)
             if k_ > 1:
                 buf = lax.ppermute(
                     applied, AXIS, [(i, i + 1) for i in range(k_ - 1)]
@@ -278,14 +276,21 @@ def build_runner(
     iterations: int | None = None,
     devices=None,
     tile_rows: int = 64,
+    batched: bool = False,
 ):
     """Build a jitted multi-device runner for a parallelism configuration.
 
     Returns ``(run, mesh)`` where ``run(arrays_host) -> np.ndarray`` places
     inputs with the configuration's sharding, executes, and gathers.
+
+    With ``batched=True`` the runner takes arrays with a leading batch
+    axis — ``(B,) + spec.shape`` — and evaluates B independent grids in
+    one dispatch: the local shard program is vmapped over the batch axis
+    while rows stay sharded over the mesh, so one compiled design serves
+    many grids (the serving hot path; see :mod:`repro.runtime.batching`).
     """
     it = spec.iterations if iterations is None else iterations
-    n_dev = max(cfg.s, 1) if cfg.variant == "temporal" else max(cfg.k, 1)
+    n_dev = cfg.devices_needed
     if devices is None:
         devices = jax.devices()[:n_dev]
     k = len(devices)
@@ -323,6 +328,13 @@ def build_runner(
         out_spec = P(AXIS)
 
     names = list(spec.inputs)
+    if batched:
+        # batch axis is unsharded and invisible to the local program
+        local = jax.vmap(local)
+        if in_spec != P():
+            in_spec = P(None, *in_spec)
+            out_spec = P(None, *out_spec)
+    row_axis = 1 if batched else 0
 
     @jax.jit
     def sharded_fn(arrays: dict):
@@ -337,14 +349,18 @@ def build_runner(
         for n in names:
             a = jnp.asarray(arrays_host[n])
             if R_pad != R:
-                a = jnp.pad(a, [(0, R_pad - R)] + [(0, 0)] * (spec.ndim - 1))
+                pads = [(0, 0)] * a.ndim
+                pads[row_axis] = (0, R_pad - R)
+                a = jnp.pad(a, pads)
             padded[n] = jax.device_put(
                 a, NamedSharding(mesh, in_spec)
             )
         out = sharded_fn(padded)
-        return np.asarray(out)[:R]
+        out = np.asarray(out)
+        return out[:, :R] if batched else out[:R]
 
     run.mesh = mesh
     run.sharded_fn = sharded_fn
     run.R_pad = R_pad
+    run.batched = batched
     return run

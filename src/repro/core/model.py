@@ -48,6 +48,12 @@ class ParallelismConfig:
     def __post_init__(self):
         assert self.variant in VARIANTS, self.variant
 
+    @property
+    def devices_needed(self) -> int:
+        """Device count this config occupies (temporal stages map to
+        devices; every executor must size device pools from this)."""
+        return max(self.s, 1) if self.variant == "temporal" else max(self.k, 1)
+
 
 @dataclasses.dataclass(frozen=True)
 class Prediction:

@@ -22,12 +22,13 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 def _hash_tokens(seed: int, step: int, batch: int, seq: int, vocab: int):
     b = np.arange(batch, dtype=np.uint64)[:, None]
     s = np.arange(seq, dtype=np.uint64)[None, :]
-    x = (np.uint64(seed) * np.uint64(0x9E3779B97F4A7C15)
-         + np.uint64(step) * np.uint64(0xBF58476D1CE4E5B9)
-         + b * np.uint64(0x94D049BB133111EB) + s * np.uint64(2654435761))
-    x ^= x >> np.uint64(31)
-    x *= np.uint64(0xD6E8FEB86659FD93)
-    x ^= x >> np.uint64(27)
+    with np.errstate(over="ignore"):  # uint64 wraparound is the hash mix
+        x = (np.uint64(seed) * np.uint64(0x9E3779B97F4A7C15)
+             + np.uint64(step) * np.uint64(0xBF58476D1CE4E5B9)
+             + b * np.uint64(0x94D049BB133111EB) + s * np.uint64(2654435761))
+        x ^= x >> np.uint64(31)
+        x *= np.uint64(0xD6E8FEB86659FD93)
+        x ^= x >> np.uint64(27)
     # fold to a skewed distribution: square-root-ish compaction
     u = (x % np.uint64(1 << 30)).astype(np.float64) / float(1 << 30)
     toks = (u * u * (vocab - 1)).astype(np.int32)

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.compat import element_block_spec
 from repro.core.spec import StencilSpec
 from repro.kernels.blockops import fused_iterations_on_block
 
@@ -122,9 +123,7 @@ def stencil_pallas(
         )
         out_ref[...] = res[sl]
 
-    in_block = (pl.Element(g["in_rows"]),) + tuple(
-        pl.Element(cp) for cp in g["padded_cols"]
-    )
+    in_block = (g["in_rows"],) + g["padded_cols"]
     in_index = lambda i: (i * g["tile_rows"],) + (0,) * (ndim - 1)
     out_block = (g["tile_rows"],) + g["padded_cols"]
     out_index = lambda i: (i,) + (0,) * (ndim - 1)
@@ -132,7 +131,7 @@ def stencil_pallas(
     out_padded = pl.pallas_call(
         kernel,
         grid=(g["n_tiles"],),
-        in_specs=[pl.BlockSpec(in_block, in_index) for _ in names],
+        in_specs=[element_block_spec(in_block, in_index) for _ in names],
         out_specs=pl.BlockSpec(out_block, out_index),
         out_shape=jax.ShapeDtypeStruct(
             (g["rows_padded"],) + g["padded_cols"], jnp.dtype(spec.dtype)

@@ -146,8 +146,9 @@ def moe_apply_ep(x, p, *, top_k: int, mesh, batch_axes, ep_axis="model",
     Requires the expert dim padded to a multiple of the EP axis
     (n_experts_padded in moe_init).
     """
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
 
     B, S, D = x.shape
     E_pad = p["router"].shape[1]

@@ -1,0 +1,25 @@
+"""Serving runtime: compiled-design cache + batched execution.
+
+``DesignCache`` memoizes auto-tuner rankings and jitted executors (the
+TPU analogue of reusing one FPGA bitstream across invocations);
+``build_batched_runner`` threads a leading batch axis through the
+single-PE Pallas kernel and the shard_map runners so one compiled design
+serves many independent grids per dispatch.  ``repro.serve.engine``
+builds the request-facing server on these pieces.
+"""
+from repro.runtime.batching import build_batched_runner, devices_needed
+from repro.runtime.cache import (
+    CachedDesign,
+    DesignCache,
+    default_cache,
+    spec_fingerprint,
+)
+
+__all__ = [
+    "build_batched_runner",
+    "devices_needed",
+    "CachedDesign",
+    "DesignCache",
+    "default_cache",
+    "spec_fingerprint",
+]

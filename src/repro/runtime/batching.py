@@ -1,0 +1,123 @@
+"""Batched stencil execution: one compiled design, many independent grids.
+
+This is the serving analogue of SASA/SODA amortizing a single FPGA
+bitstream across many invocations: the expensive artefact (an auto-tuned,
+jitted design) is built once and then fed batches of grids, with the batch
+axis threaded through whichever executor the design uses:
+
+  * single-device designs run the single-PE fused kernel under ``jax.vmap``
+    (the Pallas kernel gains a leading grid dimension; the jnp fallback
+    vectorises directly), so B grids share one kernel launch sequence;
+  * multi-device designs run the same shard_map local programs vmapped
+    over the batch axis (see ``build_runner(batched=True)``), so rows stay
+    sharded across the mesh while B grids ride one collective schedule.
+
+Batch-axis semantics: every array in a batch call is ``(B,) + spec.shape``
+and batch entries are fully independent — there is no halo exchange or any
+other coupling across the batch axis, and the exterior-zero boundary
+applies per grid.
+"""
+from __future__ import annotations
+
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distribute import build_runner
+from repro.core.model import ParallelismConfig
+from repro.core.spec import StencilSpec
+from repro.kernels import ops
+
+
+def devices_needed(cfg: ParallelismConfig) -> int:
+    """Device count a config occupies (see ParallelismConfig.devices_needed)."""
+    return cfg.devices_needed
+
+
+def resolve_backend(backend: str) -> str:
+    """'auto' picks the Pallas kernel on TPU, the jnp executor elsewhere
+    (interpret-mode Pallas is a validation tool, not a serving path)."""
+    if backend != "auto":
+        return backend
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def build_batched_runner(
+    spec: StencilSpec,
+    cfg: ParallelismConfig,
+    iterations: int | None = None,
+    devices=None,
+    tile_rows: int = 64,
+    backend: str = "auto",
+    interpret: bool | None = None,
+    align_cols: int = 1,
+):
+    """Compile a runner mapping ``{name: (B,) + spec.shape}`` -> ``(B,) +
+    spec.shape`` for a chosen parallelism configuration.
+
+    Single-device configs (including temporal designs on a one-device
+    host, where the PE cascade degenerates to fused rounds on one chip)
+    use the single-PE kernel; multi-device configs use the batched
+    shard_map runner.  The returned callable carries ``.path`` ("single_pe"
+    or "shard_map"), ``.backend``, and ``.n_devices`` for reporting.
+    """
+    it = spec.iterations if iterations is None else iterations
+    avail = list(devices) if devices is not None else jax.devices()
+    n_dev = min(devices_needed(cfg), len(avail))
+
+    if n_dev <= 1:
+        bk = resolve_backend(backend)
+        interp = (jax.default_backend() != "tpu") if interpret is None else interpret
+        s = max(min(cfg.s, it), 1)
+        tile = cfg.tile_rows or tile_rows
+
+        def one_grid(arrays: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
+            return ops.stencil_run(
+                spec, arrays, it, s=s, tile_rows=tile, backend=bk,
+                interpret=interp, align_cols=align_cols,
+            )
+
+        fn = jax.jit(jax.vmap(one_grid))
+        path, mesh, n_used = "single_pe", None, 1
+    else:
+        bk = "shard_map"
+        fn = build_runner(
+            spec, cfg, iterations=it, devices=avail[:n_dev],
+            tile_rows=tile_rows, batched=True,
+        )
+        path, mesh, n_used = "shard_map", fn.mesh, n_dev
+
+    def run(arrays: Mapping[str, jnp.ndarray]) -> np.ndarray:
+        B = None
+        for n in spec.inputs:
+            if n not in arrays:
+                raise ValueError(
+                    f"batched runner missing input {n!r} "
+                    f"(spec inputs: {sorted(spec.inputs)})"
+                )
+            shape = tuple(jnp.shape(arrays[n]))
+            if len(shape) != spec.ndim + 1 or shape[1:] != tuple(spec.shape):
+                raise ValueError(
+                    f"batched runner expects {n} shaped (B,) + {spec.shape}, "
+                    f"got {shape}"
+                )
+            if B is None:
+                B = shape[0]
+            elif shape[0] != B:
+                raise ValueError(
+                    f"inconsistent batch sizes: {n} has B={shape[0]}, "
+                    f"expected {B}"
+                )
+        out = fn({n: jnp.asarray(arrays[n]) for n in spec.inputs})
+        return np.asarray(out)
+
+    run.spec = spec
+    run.cfg = cfg
+    run.iterations = it
+    run.path = path
+    run.backend = bk
+    run.mesh = mesh
+    run.n_devices = n_used
+    return run

@@ -1,1 +1,8 @@
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import (
+    Request,
+    ServeEngine,
+    StencilRequest,
+    StencilServer,
+)
+
+__all__ = ["Request", "ServeEngine", "StencilRequest", "StencilServer"]

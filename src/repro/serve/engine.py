@@ -1,72 +1,291 @@
-"""Batched serving engine: prefill + decode with KV caches.
+"""Stencil serving engine: micro-batched dispatch of cached compiled designs.
 
-Continuous-batching-lite: a fixed decode batch; finished sequences are
-replaced by queued requests at step granularity (slot recycling).  Decode
-and prefill are separately jitted — the production pattern where prefill
-and decode run as distinct programs with different shardings.
+The production-facing front of the runtime subsystem.  A server owns a
+:class:`repro.runtime.DesignCache`; clients register stencil designs (DSL
+text or :class:`StencilSpec`) and then submit grids.  The serving flow is
+
+  register(name, dsl)  ── autotune (ranking cached) ── compile batched
+                          runner (jit cached) ── optional warmup dispatch
+  submit(name, arrays) ── queued
+  flush()              ── queued requests grouped by design, chunked into
+                          micro-batches of ``max_batch`` grids, padded to
+                          a fixed bucket size, dispatched, unpadded
+
+**Batch-axis semantics** (shared with :mod:`repro.runtime.batching`): one
+dispatch evaluates ``(B,) + spec.shape`` arrays where the B grids are
+fully independent — no halo exchange, reduction, or any other coupling
+crosses the batch axis, and the exterior-zero boundary applies per grid.
+All grids in one dispatch share the design's spec (shape, dtype,
+iterations); requests for different designs never share a batch.  Short
+final chunks are padded by repeating the first grid of the chunk up to
+the compiled bucket size (so a design compiles exactly one batched
+program) and the padding's outputs are discarded.
+
+Per-design counters (``stats()``): requests served, batches dispatched,
+design-cache hit/miss for the register call, compile/warmup seconds,
+execution latency (count / total / mean / max seconds), and requests
+lost to dispatch faults (whose tickets resolve via ``failures``).
+
+The LM token-serving engine lives in :mod:`repro.serve.lm`; its classes
+are re-exported here for backward compatibility.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
+from typing import Mapping
 
-import jax
-import jax.numpy as jnp
 import numpy as np
+
+# backward-compatible re-exports (pre-runtime engine.py held the LM engine)
+from repro.serve.lm import Request, ServeEngine  # noqa: F401
+from repro.runtime.cache import DesignCache, default_cache
 
 
 @dataclasses.dataclass
-class Request:
-    prompt: np.ndarray            # (S,) int32
-    max_new_tokens: int = 16
-    eos: int = -1                 # -1: never stop early
+class StencilRequest:
+    """One grid to evaluate under a registered design."""
+
+    design: str
+    arrays: Mapping[str, np.ndarray]   # each shaped spec.shape
 
 
-class ServeEngine:
-    def __init__(self, model, params, batch_size: int, cache_len: int):
-        self.model = model
-        self.params = params
-        self.B = batch_size
-        self.cache_len = cache_len
-        self._decode = jax.jit(model.decode_step)
-        self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b))
+@dataclasses.dataclass
+class DesignCounters:
+    cache_hit: bool = False            # register() served fully from cache
+    build_time_s: float = 0.0          # ranking + jit trace time (0 on hit)
+    warmup_time_s: float = 0.0
+    requests: int = 0
+    batches: int = 0
+    padded_grids: int = 0              # throwaway grids added for bucketing
+    failed_requests: int = 0           # requests lost to dispatch faults
+    exec_count: int = 0
+    exec_total_s: float = 0.0
+    exec_max_s: float = 0.0
 
-    def _grow_caches(self, caches, S):
-        cap = self.model.init_cache(self.B, self.cache_len,
-                                    dtype=self.model.cfg.act_dtype)
+    @property
+    def exec_mean_s(self) -> float:
+        return self.exec_total_s / self.exec_count if self.exec_count else 0.0
 
-        def merge(c, g):
-            if c.shape == g.shape:
-                return g
-            pad = [(0, cs - gs) for cs, gs in zip(c.shape, g.shape)]
-            cv = -1 if g.dtype == jnp.int32 else 0
-            return jnp.pad(g, pad, constant_values=cv)
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["exec_mean_s"] = self.exec_mean_s
+        return d
 
-        return jax.tree.map(merge, cap, caches)
 
-    def generate(self, requests: list[Request]) -> list[np.ndarray]:
-        """Greedy decode a batch of same-length-padded prompts."""
-        assert len(requests) <= self.B
-        reqs = list(requests) + [requests[-1]] * (self.B - len(requests))
-        S = max(len(r.prompt) for r in reqs)
-        prompts = np.stack([
-            np.pad(r.prompt, (S - len(r.prompt), 0)) for r in reqs])
-        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
-        logits, caches = self._prefill(self.params, batch)
-        caches = self._grow_caches(caches, S)
-        max_new = max(r.max_new_tokens for r in reqs)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        outs = [tok]
-        for t in range(max_new - 1):
-            pos = jnp.full((self.B,), S + t, jnp.int32)
-            logits, caches = self._decode(self.params, tok, caches, pos)
-            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-            outs.append(tok)
-        gen = np.asarray(jnp.concatenate(outs, axis=1))
-        results = []
-        for i, r in enumerate(requests):
-            g = gen[i, :r.max_new_tokens]
-            if r.eos >= 0 and (g == r.eos).any():
-                g = g[:int(np.argmax(g == r.eos)) + 1]
-            results.append(g)
+@dataclasses.dataclass
+class _Registered:
+    name: str
+    cached: object                     # runtime.cache.CachedDesign
+    counters: DesignCounters
+    iterations: int | None = None      # as passed at register time
+
+    @property
+    def spec(self):
+        return self.cached.design.spec
+
+    @property
+    def config(self):
+        return self.cached.design.config
+
+
+class StencilServer:
+    """Micro-batching server over cached, batched stencil designs.
+
+    ``max_batch`` bounds grids per dispatch.  ``warmup=True`` (default)
+    pushes one zero batch through a freshly compiled design at register
+    time so the first real request never pays the compile.
+    """
+
+    def __init__(
+        self,
+        max_batch: int = 8,
+        platform=None,
+        devices=None,
+        cache: DesignCache | None = None,
+        warmup: bool = True,
+        backend: str = "auto",
+        tile_rows: int = 64,
+    ):
+        assert max_batch >= 1
+        self.max_batch = max_batch
+        self.platform = platform
+        self.devices = devices
+        self.cache = cache if cache is not None else default_cache()
+        self.warmup = warmup
+        self.backend = backend
+        self.tile_rows = tile_rows
+        self._designs: dict[str, _Registered] = {}
+        self._queue: list[tuple[int, StencilRequest]] = []
+        self.failures: dict[int, Exception] = {}   # ticket -> dispatch fault
+        self.completed: dict[int, np.ndarray] = {}  # ticket -> result
+        self._next_ticket = 0
+
+    # ------------------------------------------------------------------
+    # design registration
+    # ------------------------------------------------------------------
+
+    def register(
+        self, name: str, source_or_spec, iterations: int | None = None
+    ) -> _Registered:
+        """Auto-tune + compile (both through the design cache) and warm up.
+
+        Re-registering a name with the same spec and iterations is
+        idempotent; re-registering it with a different one raises.
+        """
+        if name in self._designs:
+            existing = self._designs[name]
+            from repro.runtime.cache import _as_spec, spec_fingerprint
+
+            fp = spec_fingerprint(_as_spec(source_or_spec))
+            if (fp != existing.cached.fingerprint
+                    or iterations != existing.iterations):
+                raise ValueError(
+                    f"design {name!r} is already registered with a "
+                    "different spec or iteration count; pick a new name"
+                )
+            return existing
+        cached = self.cache.get_or_build(
+            source_or_spec, platform=self.platform, iterations=iterations,
+            devices=self.devices, tile_rows=self.tile_rows,
+            backend=self.backend,
+        )
+        ctr = DesignCounters(
+            cache_hit=cached.hit,
+            build_time_s=0.0 if cached.hit else cached.build_time_s,
+        )
+        reg = _Registered(
+            name=name, cached=cached, counters=ctr, iterations=iterations
+        )
+        # Warm even on a design-cache hit: the compiled program is shaped
+        # (max_batch, ...) and THIS server's bucket size may be new.  When
+        # the shape is already jit-cached the warmup dispatch is ~free.
+        if self.warmup:
+            spec = reg.spec
+            zeros = {
+                n: np.zeros((self.max_batch,) + tuple(shape), dtype=dt)
+                for n, (dt, shape) in spec.inputs.items()
+            }
+            t0 = time.perf_counter()
+            cached.runner(zeros)
+            ctr.warmup_time_s = time.perf_counter() - t0
+        self._designs[name] = reg
+        return reg
+
+    def design(self, name: str) -> _Registered:
+        return self._designs[name]
+
+    # ------------------------------------------------------------------
+    # request path
+    # ------------------------------------------------------------------
+
+    def submit(self, request: StencilRequest) -> int:
+        """Queue one grid; returns a ticket resolved by the next flush().
+
+        Requests are validated here (input names + grid shapes against
+        the registered spec), so a malformed request is rejected at
+        submit time instead of poisoning a later batch.
+        """
+        if request.design not in self._designs:
+            raise KeyError(
+                f"design {request.design!r} is not registered "
+                f"(have {sorted(self._designs)})"
+            )
+        spec = self._designs[request.design].spec
+        for n, (_, shape) in spec.inputs.items():
+            if n not in request.arrays:
+                raise ValueError(
+                    f"request for {request.design!r} is missing input {n!r}"
+                )
+            got = tuple(np.shape(request.arrays[n]))
+            if got != tuple(shape):
+                raise ValueError(
+                    f"request for {request.design!r}: {n} must be shaped "
+                    f"{tuple(shape)}, got {got}"
+                )
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._queue.append((ticket, request))
+        return ticket
+
+    def flush(self) -> dict[int, np.ndarray]:
+        """Dispatch every queued request in design-grouped micro-batches.
+
+        A dispatch fault in one micro-batch never drops other requests:
+        every chunk is attempted, successful results are returned (and
+        retained in ``self.completed`` until claimed), and the failed
+        chunk's tickets land in ``self.failures`` (ticket -> exception)
+        instead of resolving.
+        """
+        by_design: dict[str, list[tuple[int, StencilRequest]]] = {}
+        for ticket, req in self._queue:
+            by_design.setdefault(req.design, []).append((ticket, req))
+        self._queue.clear()
+        results: dict[int, np.ndarray] = {}
+        for name, items in by_design.items():
+            reg = self._designs[name]
+            for lo in range(0, len(items), self.max_batch):
+                chunk = items[lo:lo + self.max_batch]
+                try:
+                    results.update(self._dispatch(reg, chunk))
+                except Exception as e:
+                    reg.counters.failed_requests += len(chunk)
+                    for ticket, _ in chunk:
+                        self.failures[ticket] = e
+        self.completed.update(results)
         return results
+
+    def serve(self, requests: list[StencilRequest]) -> list[np.ndarray]:
+        """submit() + flush(), preserving request order; claims only THIS
+        call's tickets from ``self.completed``.
+
+        Raises if any of this call's requests failed to dispatch — other
+        tickets' results (and this call's successful ones) stay claimable
+        in ``self.completed``.
+        """
+        tickets = [self.submit(r) for r in requests]
+        self.flush()
+        failed = [t for t in tickets if t in self.failures]
+        if failed:
+            raise RuntimeError(
+                f"{len(failed)}/{len(tickets)} requests failed to dispatch"
+            ) from self.failures[failed[0]]
+        return [self.completed.pop(t) for t in tickets]
+
+    def _dispatch(self, reg: _Registered, chunk) -> dict[int, np.ndarray]:
+        spec = reg.spec
+        n = len(chunk)
+        # pad to the full compiled bucket: one batched program per design
+        pad = self.max_batch - n
+        stacked = {
+            name: np.stack(
+                [np.asarray(req.arrays[name]) for _, req in chunk]
+                + [np.asarray(chunk[0][1].arrays[name])] * pad
+            )
+            for name in spec.inputs
+        }
+        t0 = time.perf_counter()
+        out = reg.cached.runner(stacked)
+        dt = time.perf_counter() - t0
+        ctr = reg.counters
+        ctr.requests += n
+        ctr.batches += 1
+        ctr.padded_grids += pad
+        ctr.exec_count += 1
+        ctr.exec_total_s += dt
+        ctr.exec_max_s = max(ctr.exec_max_s, dt)
+        return {ticket: out[i] for i, (ticket, _) in enumerate(chunk)}
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+
+    def stats(self) -> dict[str, dict]:
+        """Per-design counters plus the shared cache's global hit/miss."""
+        out = {n: r.counters.as_dict() for n, r in self._designs.items()}
+        out["_cache"] = {
+            "hits": self.cache.hits,
+            "misses": self.cache.misses,
+            "entries": len(self.cache),
+        }
+        return out

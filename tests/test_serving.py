@@ -1,0 +1,194 @@
+"""StencilServer: micro-batching, warmup, counters, cache behaviour."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs import stencils
+from repro.kernels import ref
+from repro.runtime import DesignCache
+from repro.serve import StencilRequest, StencilServer
+
+RNG = np.random.default_rng(11)
+
+
+def grid_request(design, spec):
+    return StencilRequest(design, {
+        n: RNG.standard_normal(shape).astype(dt)
+        for n, (dt, shape) in spec.inputs.items()
+    })
+
+
+def oracle(spec, req, iters):
+    one = {n: jnp.asarray(a) for n, a in req.arrays.items()}
+    return np.asarray(ref.stencil_iterations_ref(spec, one, iters))
+
+
+def test_serve_matches_oracle_and_microbatches():
+    iters = 3
+    spec = stencils.jacobi2d(shape=(20, 12), iterations=iters)
+    srv = StencilServer(max_batch=4, cache=DesignCache())
+    srv.register("jac", spec)
+    reqs = [grid_request("jac", spec) for _ in range(7)]
+    outs = srv.serve(reqs)
+    for req, out in zip(reqs, outs):
+        np.testing.assert_allclose(
+            out, oracle(spec, req, iters), rtol=2e-4, atol=2e-4
+        )
+    st = srv.stats()["jac"]
+    assert st["requests"] == 7
+    assert st["batches"] == 2          # 7 grids / max_batch 4
+    assert st["padded_grids"] == 1     # second bucket padded 3 -> 4
+    assert st["exec_count"] == 2
+    assert st["exec_total_s"] > 0
+    assert st["exec_max_s"] >= st["exec_mean_s"] > 0
+
+
+def test_warmup_compiles_at_register_time():
+    spec = stencils.jacobi2d(shape=(16, 8), iterations=2)
+    srv = StencilServer(max_batch=2, cache=DesignCache(), warmup=True)
+    reg = srv.register("jac", spec)
+    assert not reg.counters.cache_hit       # fresh cache: built, then warmed
+    assert reg.counters.warmup_time_s > 0
+    assert reg.counters.build_time_s > 0
+
+
+def test_second_register_is_a_design_cache_hit():
+    cache = DesignCache()
+    spec = stencils.jacobi2d(shape=(16, 8), iterations=2)
+    srv1 = StencilServer(max_batch=2, cache=cache)
+    srv1.register("jac", spec)
+    srv2 = StencilServer(max_batch=2, cache=cache)
+    reg2 = srv2.register("jac", spec)
+    assert reg2.counters.cache_hit          # no re-rank, no re-jit
+    assert reg2.counters.build_time_s == 0.0
+    assert reg2.cached.runner is srv1.design("jac").cached.runner
+
+
+def test_mixed_designs_never_share_a_batch():
+    cache = DesignCache()
+    iters = 2
+    jac = stencils.jacobi2d(shape=(16, 8), iterations=iters)
+    hot = stencils.hotspot(shape=(16, 8), iterations=iters)
+    srv = StencilServer(max_batch=8, cache=cache)
+    srv.register("jac", jac)
+    srv.register("hot", hot)
+    reqs = [grid_request("jac", jac), grid_request("hot", hot),
+            grid_request("jac", jac)]
+    outs = srv.serve(reqs)
+    np.testing.assert_allclose(
+        outs[0], oracle(jac, reqs[0], iters), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(
+        outs[1], oracle(hot, reqs[1], iters), rtol=2e-4, atol=2e-4)
+    st = srv.stats()
+    assert st["jac"]["batches"] == 1 and st["jac"]["requests"] == 2
+    assert st["hot"]["batches"] == 1 and st["hot"]["requests"] == 1
+
+
+def test_submit_unknown_design_raises():
+    srv = StencilServer(cache=DesignCache())
+    import pytest
+    with pytest.raises(KeyError, match="not registered"):
+        srv.submit(StencilRequest("nope", {}))
+
+
+def test_submit_validates_inputs_eagerly():
+    import pytest
+    spec = stencils.jacobi2d(shape=(12, 6), iterations=2)
+    srv = StencilServer(max_batch=2, cache=DesignCache())
+    srv.register("jac", spec)
+    with pytest.raises(ValueError, match="missing input"):
+        srv.submit(StencilRequest("jac", {}))
+    with pytest.raises(ValueError, match="must be shaped"):
+        srv.submit(StencilRequest(
+            "jac", {"in_1": np.zeros((6, 12), np.float32)}))
+    assert srv.flush() == {}  # nothing malformed reached the queue
+
+
+def test_register_name_collision():
+    import pytest
+    a = stencils.jacobi2d(shape=(12, 6), iterations=2)
+    b = stencils.jacobi2d(shape=(16, 6), iterations=2)
+    srv = StencilServer(max_batch=2, cache=DesignCache())
+    r1 = srv.register("jac", a)
+    assert srv.register("jac", a) is r1      # same spec: idempotent
+    with pytest.raises(ValueError, match="already registered"):
+        srv.register("jac", b)               # different spec: rejected
+
+
+def test_dispatch_fault_isolates_to_its_chunk():
+    """One faulty micro-batch must not drop other chunks' results."""
+    spec = stencils.jacobi2d(shape=(12, 6), iterations=2)
+    srv = StencilServer(max_batch=2, cache=DesignCache())
+    srv.register("jac", spec)
+    reqs = [grid_request("jac", spec) for _ in range(4)]  # 2 chunks
+    tickets = [srv.submit(r) for r in reqs]
+    runner = srv.design("jac").cached.runner
+    calls = {"n": 0}
+
+    def flaky(arrays):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("injected dispatch fault")
+        return runner(arrays)
+
+    srv.design("jac").cached.runner = flaky
+    done = srv.flush()
+    # chunk 2 completed despite chunk 1 faulting; its tickets resolved
+    assert sorted(done) == tickets[2:]
+    np.testing.assert_allclose(
+        done[tickets[2]], oracle(spec, reqs[2], 2), rtol=2e-4, atol=2e-4)
+    # chunk 1's tickets carry the fault
+    assert set(srv.failures) == set(tickets[:2])
+    assert srv.stats()["jac"]["failed_requests"] == 2
+    srv.design("jac").cached.runner = runner
+
+
+def test_serve_raises_when_own_request_fails():
+    import pytest
+    spec = stencils.jacobi2d(shape=(12, 6), iterations=2)
+    srv = StencilServer(max_batch=2, cache=DesignCache())
+    srv.register("jac", spec)
+
+    def broken(arrays):
+        raise RuntimeError("injected dispatch fault")
+
+    srv.design("jac").cached.runner = broken
+    with pytest.raises(RuntimeError, match="failed to dispatch"):
+        srv.serve([grid_request("jac", spec)])
+
+
+def test_bystander_results_survive_another_clients_failed_serve():
+    """serve() raising must not lose results for tickets it doesn't own."""
+    import pytest
+    jac = stencils.jacobi2d(shape=(12, 6), iterations=2)
+    hot = stencils.hotspot(shape=(12, 6), iterations=2)
+    srv = StencilServer(max_batch=2, cache=DesignCache())
+    srv.register("jac", jac)
+    srv.register("hot", hot)
+    bystander_req = grid_request("jac", jac)
+    bystander = srv.submit(bystander_req)          # client A, not yet flushed
+
+    def broken(arrays):
+        raise RuntimeError("injected dispatch fault")
+
+    srv.design("hot").cached.runner = broken
+    with pytest.raises(RuntimeError, match="failed to dispatch"):
+        srv.serve([grid_request("hot", hot)])      # client B fails
+    out = srv.completed.pop(bystander)             # A's result was retained
+    np.testing.assert_allclose(
+        out, oracle(jac, bystander_req, 2), rtol=2e-4, atol=2e-4)
+
+
+def test_tickets_resolve_in_submission_order():
+    iters = 2
+    spec = stencils.jacobi2d(shape=(12, 6), iterations=iters)
+    srv = StencilServer(max_batch=2, cache=DesignCache())
+    srv.register("jac", spec)
+    reqs = [grid_request("jac", spec) for _ in range(3)]
+    tickets = [srv.submit(r) for r in reqs]
+    done = srv.flush()
+    assert sorted(done) == sorted(tickets)
+    for t, r in zip(tickets, reqs):
+        np.testing.assert_allclose(
+            done[t], oracle(spec, r, iters), rtol=2e-4, atol=2e-4
+        )
+    assert srv.flush() == {}  # queue drained
