@@ -1,8 +1,20 @@
-"""Serve stencil workloads through the cached, batched runtime.
+"""Serve stencil workloads through the cached, batched, bucketed runtime.
 
-Registers two designs (auto-tuned once each), pushes a mixed stream of
-requests through the micro-batching server, and prints the per-design
-counters — including the design-cache hit a second server observes.
+Part 1 registers two exact-shape designs (auto-tuned once each), pushes a
+mixed stream of requests through the micro-batching server, and prints
+the per-design counters — including the design-cache hit a second server
+observes.
+
+Part 2 is the multi-geometry path: ONE bucketed registration serves a
+trace of many distinct grid shapes.  Requests are routed to padded
+canonical bucket shapes (powers of two here), one masked design is
+compiled per bucket actually hit, and grids of different sizes sharing a
+bucket ride the same micro-batch.  The bucket-ladder policy trades
+compile time against padded compute: coarser rungs -> fewer compiled
+designs but more wasted padding FLOPs/bytes (up to ~4x for a 2-D grid
+just past a rung); a finer `ShapeBucketer(ladder=...)` caps the waste at
+the cost of more designs.  Dispatch is async double-buffered: the host
+stages micro-batch N+1 while the device executes micro-batch N.
 
     PYTHONPATH=src python examples/serve_stencils.py
 """
@@ -29,8 +41,8 @@ output float: out_1(0,0) = (tmp(0,-1) + tmp(0,0) + tmp(0,1)) / 3
 """
 
 
-def main():
-    rng = np.random.default_rng(0)
+def exact_shape_demo(rng):
+    print("== exact-shape serving (one design per registered geometry) ==")
     cache = DesignCache()
     srv = StencilServer(max_batch=4, cache=cache)
     for name, dsl in [("jacobi", JACOBI), ("blur", BLUR)]:
@@ -64,7 +76,46 @@ def main():
     srv2 = StencilServer(max_batch=4, cache=cache)
     reg2 = srv2.register("jacobi", JACOBI)
     print(f"\nsecond server register('jacobi'): cache_hit="
-          f"{reg2.counters.cache_hit}, build {reg2.counters.build_time_s:.3f} s")
+          f"{reg2.counters.cache_hit}, build "
+          f"{reg2.counters.build_time_s:.3f} s")
+
+
+def bucketed_demo(rng):
+    print("\n== bucketed serving (one registration, many geometries) ==")
+    cache = DesignCache()
+    srv = StencilServer(max_batch=4, cache=cache, bucketing=True)
+    reg = srv.register("jacobi", JACOBI)
+    print(f"registered 'jacobi' as a logical kernel "
+          f"(warm bucket: {sorted(reg.cached.buckets)})")
+
+    # a mixed-shape request trace: distinct geometries, few buckets
+    shapes = [(512, 256), (300, 200), (257, 129), (120, 80), (500, 250),
+              (260, 140), (100, 33), (444, 222), (65, 65), (512, 256)]
+    reqs = [
+        StencilRequest("jacobi", {
+            "in_1": rng.standard_normal(s).astype(np.float32)
+        })
+        for s in shapes
+    ]
+    outs = srv.serve(reqs)
+    assert all(o.shape == s for o, s in zip(outs, shapes))
+    st = srv.stats()["jacobi"]
+    print(f"served {len(shapes)} grids of {len(set(shapes))} distinct "
+          f"shapes in {st['batches']} micro-batches from "
+          f"{st['compiled_buckets']} compiled bucket designs:")
+    for bucket, bst in sorted(st["buckets"].items()):
+        print(f"  bucket {bucket}: {bst['requests']} grids, "
+              f"{bst['hits']} hits / {bst['misses']} compiles "
+              f"(build {bst['build_time_s'] * 1e3:.0f} ms)")
+    print("bucket-ladder policy: powers of two per dim -> few designs, "
+          "padded compute; pass ShapeBucketer(ladder=...) to trade the "
+          "other way")
+
+
+def main():
+    rng = np.random.default_rng(0)
+    exact_shape_demo(rng)
+    bucketed_demo(rng)
 
 
 if __name__ == "__main__":

@@ -20,8 +20,11 @@ python -m pytest -x -q "${MARK[@]}"
 echo "== smoke: examples/quickstart.py =="
 python examples/quickstart.py
 
-echo "== smoke: serving runtime (cache + batched dispatch) =="
+echo "== smoke: serving runtime (cache + batching + bucketing + async) =="
+# --smoke scales the mixed-geometry trace down to CI size while asserting
+# the same gates: >=20 shapes from <=4 bucket designs, >=5x over per-shape
+# autotune, async dispatch not slower than sync, reference-exact results.
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
-  python benchmarks/serving_throughput.py
+  python benchmarks/serving_throughput.py --smoke
 
 echo "CI OK"

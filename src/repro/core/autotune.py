@@ -48,6 +48,7 @@ def autotune(
     build: bool = True,
     tile_rows: int = 64,
     cache=None,
+    bucket=False,
 ) -> TunedDesign:
     """The SASA entry point: DSL text (or parsed spec) -> optimized runner.
 
@@ -55,7 +56,52 @@ def autotune(
     the ranking and the jitted runner across calls (serving entry points
     do this by default; repeated tuning of the same spec then costs a
     dictionary lookup instead of a re-rank + re-jit).
+
+    With ``bucket`` (requires ``cache``; ``True`` for the default
+    power-of-two ladder or a :class:`repro.runtime.ShapeBucketer`), the
+    design is tuned and compiled for the spec's padded canonical *bucket*
+    shape instead of its exact shape, and the returned runner pads, masks,
+    and unpads transparently — so structurally identical specs whose grid
+    sizes share a bucket share one compiled design (multi-geometry
+    serving; see :mod:`repro.runtime.bucketing`).
     """
+    if bucket:
+        if cache is None:
+            raise ValueError("autotune(bucket=...) requires cache=")
+        from repro.runtime.bucketing import ShapeBucketer
+
+        spec = (
+            source_or_spec
+            if isinstance(source_or_spec, StencilSpec)
+            else dsl.parse(source_or_spec)
+        )
+        bucketer = bucket if isinstance(bucket, ShapeBucketer) else None
+        bd = cache.bucketed(
+            spec, bucketer=bucketer, platform=platform,
+            iterations=iterations, devices=devices, tile_rows=tile_rows,
+        )
+        if not build:
+            from repro.runtime.bucketing import bucket_spec as _bucket_spec
+
+            bucket_shape = bd.bucketer.bucket_for(spec.shape)
+            return cache.design(
+                _bucket_spec(spec, bucket_shape), platform=platform,
+                iterations=iterations, devices=devices,
+            )
+        entry = bd.runner_for(spec.shape)
+        inner = entry.cached.design
+
+        def runner(arrays):
+            import numpy as np
+
+            # pass every key through: the bucket runner validates names,
+            # so unknown inputs fail loudly instead of being dropped here
+            out = entry.runner(
+                {n: np.asarray(a)[None] for n, a in arrays.items()}
+            )
+            return out[0]
+
+        return TunedDesign(spec, inner.prediction, inner.ranking, runner)
     if cache is not None:
         if not build:
             return cache.design(
@@ -115,15 +161,29 @@ def soda_baseline(
     if platform is None:
         n_avail = len(devices) if devices is not None else len(jax.devices())
         platform = DEFAULT_TPU.with_chips(n_avail)
-    it = spec.iterations if iterations is None else iterations
     cands = [
         p for p in model.choose_best(spec, platform, iterations=iterations)
         if p.config.variant == "temporal"
     ]
-    pred = cands[0]
-    runner = (
-        build_runner(spec, pred.config, iterations=iterations,
-                     devices=devices, tile_rows=tile_rows)
-        if build else None
-    )
-    return TunedDesign(spec, pred, cands, runner)
+    if not cands:
+        raise RuntimeError(
+            f"no temporal candidate configurations for {spec.name!r} on "
+            f"{platform!r}: the SODA baseline explores only the temporal "
+            "axis"
+        )
+    if not build:
+        return TunedDesign(spec, cands[0], cands, None)
+    # same "build next best design" retry loop as autotune(): an
+    # infeasible temporal config falls back to the next candidate
+    last_err = None
+    for pred in cands:
+        try:
+            runner = build_runner(
+                spec, pred.config, iterations=iterations, devices=devices,
+                tile_rows=tile_rows,
+            )
+        except ValueError as e:
+            last_err = e
+            continue
+        return TunedDesign(spec, pred, cands, runner)
+    raise RuntimeError(f"no feasible temporal configuration: {last_err}")

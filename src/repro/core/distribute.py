@@ -344,7 +344,12 @@ def build_runner(
             out_specs=out_spec,
         )(arrays)
 
-    def run(arrays_host: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
+    # The three dispatch phases are exposed separately so serving layers can
+    # overlap host staging of micro-batch N+1 with device execution of
+    # micro-batch N (async double-buffered submit): ``stage`` does host->
+    # device placement, ``dispatch`` enqueues the computation without
+    # blocking, ``finalize`` blocks (np.asarray) and strips row padding.
+    def stage(arrays_host: Mapping[str, jnp.ndarray]) -> dict:
         padded = {}
         for n in names:
             a = jnp.asarray(arrays_host[n])
@@ -355,10 +360,21 @@ def build_runner(
             padded[n] = jax.device_put(
                 a, NamedSharding(mesh, in_spec)
             )
-        out = sharded_fn(padded)
+        return padded
+
+    def dispatch(staged: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
+        return sharded_fn(dict(staged))
+
+    def finalize(out: jnp.ndarray) -> np.ndarray:
         out = np.asarray(out)
         return out[:, :R] if batched else out[:R]
 
+    def run(arrays_host: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
+        return finalize(dispatch(stage(arrays_host)))
+
+    run.stage = stage
+    run.dispatch = dispatch
+    run.finalize = finalize
     run.mesh = mesh
     run.sharded_fn = sharded_fn
     run.R_pad = R_pad

@@ -1,25 +1,63 @@
-"""Serving runtime: compiled-design cache + batched execution.
+"""Serving runtime: compiled-design cache + batched, bucketed execution.
 
 ``DesignCache`` memoizes auto-tuner rankings and jitted executors (the
 TPU analogue of reusing one FPGA bitstream across invocations);
 ``build_batched_runner`` threads a leading batch axis through the
 single-PE Pallas kernel and the shard_map runners so one compiled design
-serves many independent grids per dispatch.  ``repro.serve.engine``
-builds the request-facing server on these pieces.
+serves many independent grids per dispatch; ``ShapeBucketer`` +
+``build_bucket_runner`` + ``DesignCache.bucketed`` let one logical kernel
+registration serve heterogeneous grid shapes from a small ladder of
+padded, masked bucket designs.  ``repro.serve.engine`` builds the
+request-facing server on these pieces.
 """
-from repro.runtime.batching import build_batched_runner, devices_needed
+from repro.runtime.batching import (
+    DegradedDesignWarning,
+    build_batched_runner,
+    build_bucket_runner,
+    devices_needed,
+    validate_batch,
+)
+from repro.runtime.bucketing import (
+    ShapeBucketer,
+    bucket_spec,
+    grid_mask_host,
+    mask_input_name,
+    masked_spec,
+    pad_batch,
+    pad_grid,
+    with_shape,
+)
 from repro.runtime.cache import (
+    BucketEntry,
+    BucketedDesign,
+    BucketStats,
     CachedDesign,
     DesignCache,
     default_cache,
     spec_fingerprint,
+    structural_fingerprint,
 )
 
 __all__ = [
+    "DegradedDesignWarning",
     "build_batched_runner",
+    "build_bucket_runner",
     "devices_needed",
+    "validate_batch",
+    "ShapeBucketer",
+    "bucket_spec",
+    "grid_mask_host",
+    "mask_input_name",
+    "masked_spec",
+    "pad_batch",
+    "pad_grid",
+    "with_shape",
+    "BucketEntry",
+    "BucketedDesign",
+    "BucketStats",
     "CachedDesign",
     "DesignCache",
     "default_cache",
     "spec_fingerprint",
+    "structural_fingerprint",
 ]

@@ -16,10 +16,22 @@ Batch-axis semantics: every array in a batch call is ``(B,) + spec.shape``
 and batch entries are fully independent — there is no halo exchange or any
 other coupling across the batch axis, and the exterior-zero boundary
 applies per grid.
+
+Every runner exposes three dispatch phases for the async serving loop —
+``run.stage(arrays)`` (host -> device placement), ``run.dispatch(staged)``
+(enqueue without blocking), ``run.finalize(out)`` (block + gather to
+numpy) — with ``run(arrays)`` the validated synchronous composition.
+
+:func:`build_bucket_runner` wraps a runner compiled for a padded canonical
+**bucket** shape so it serves any grid that fits inside the bucket, with
+the real grid's exterior-zero boundary re-imposed in-kernel by a streamed
+mask input (see :mod:`repro.runtime.bucketing`); results are bit-identical
+to executing the same design unpadded.
 """
 from __future__ import annotations
 
-from typing import Mapping
+import warnings
+from typing import Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +41,38 @@ from repro.core.distribute import build_runner
 from repro.core.model import ParallelismConfig
 from repro.core.spec import StencilSpec
 from repro.kernels import ops
+from repro.runtime.bucketing import (
+    bucket_spec,
+    grid_mask_host,
+    mask_input_name,
+    pad_batch,
+)
+
+
+class DegradedDesignWarning(RuntimeWarning):
+    """A design is executing with less parallelism than its config claims."""
+
+
+def is_degraded(cfg: ParallelismConfig, n_avail: int) -> bool:
+    """True when a pool of ``n_avail`` devices cannot realise ``cfg``'s
+    parallelism.  The one sanctioned exception is a temporal design on a
+    one-device host: the PE cascade degenerates to fused rounds on one
+    chip with the fusion depth (and the analytical model's single-chip
+    prediction) preserved."""
+    n_dev = min(cfg.devices_needed, n_avail)
+    return n_dev < cfg.devices_needed and not (
+        cfg.variant == "temporal" and n_dev <= 1
+    )
+
+
+def degraded_message(cfg: ParallelismConfig, n_avail: int) -> str:
+    n_dev = min(cfg.devices_needed, n_avail)
+    return (
+        f"design {cfg.variant}(k={cfg.k}, s={cfg.s}) needs "
+        f"{cfg.devices_needed} device(s) but only {n_avail} are available; "
+        f"executing on {n_dev} loses the configured parallelism while "
+        f"run.cfg still claims it"
+    )
 
 
 def devices_needed(cfg: ParallelismConfig) -> int:
@@ -44,6 +88,55 @@ def resolve_backend(backend: str) -> str:
     return "pallas" if jax.default_backend() == "tpu" else "jnp"
 
 
+def validate_batch(
+    spec: StencilSpec,
+    arrays: Mapping[str, np.ndarray],
+    exact: bool = True,
+) -> tuple[int, tuple[int, ...]]:
+    """Check a batched input dict against ``spec``; returns ``(B, grid)``.
+
+    Unknown array names raise (a typo'd input would otherwise be silently
+    dropped and the stencil served with the wrong data), as do missing
+    inputs and inconsistent batch shapes.  ``exact=True`` pins the grid
+    to ``spec.shape``; ``exact=False`` (the bucket runner) accepts any
+    uniform grid shape of the right rank and returns it.
+    """
+    unknown = sorted(set(arrays) - set(spec.inputs))
+    if unknown:
+        raise ValueError(
+            f"unknown input(s) {unknown} for spec {spec.name!r} "
+            f"(spec inputs: {sorted(spec.inputs)})"
+        )
+    full = None
+    for n in spec.inputs:
+        if n not in arrays:
+            raise ValueError(
+                f"batched runner missing input {n!r} "
+                f"(spec inputs: {sorted(spec.inputs)})"
+            )
+        shape = tuple(jnp.shape(arrays[n]))
+        if exact and (
+            len(shape) != spec.ndim + 1 or shape[1:] != tuple(spec.shape)
+        ):
+            raise ValueError(
+                f"batched runner expects {n} shaped (B,) + {spec.shape}, "
+                f"got {shape}"
+            )
+        if full is None:
+            if len(shape) != spec.ndim + 1:
+                raise ValueError(
+                    f"batched runner expects {n} shaped (B,) + grid, "
+                    f"got {shape}"
+                )
+            full = shape
+        elif shape != full:
+            raise ValueError(
+                f"inconsistent batch shapes: {n} is {shape}, "
+                f"expected {full}"
+            )
+    return full[0], full[1:]
+
+
 def build_batched_runner(
     spec: StencilSpec,
     cfg: ParallelismConfig,
@@ -53,19 +146,33 @@ def build_batched_runner(
     backend: str = "auto",
     interpret: bool | None = None,
     align_cols: int = 1,
+    strict: bool = False,
 ):
     """Compile a runner mapping ``{name: (B,) + spec.shape}`` -> ``(B,) +
     spec.shape`` for a chosen parallelism configuration.
 
-    Single-device configs (including temporal designs on a one-device
-    host, where the PE cascade degenerates to fused rounds on one chip)
-    use the single-PE kernel; multi-device configs use the batched
-    shard_map runner.  The returned callable carries ``.path`` ("single_pe"
-    or "shard_map"), ``.backend``, and ``.n_devices`` for reporting.
+    Single-device configs use the single-PE kernel; multi-device configs
+    use the batched shard_map runner.  A config needing more devices than
+    the pool provides is **degraded**: it executes, but with less
+    parallelism than ``run.cfg`` claims.  Degradation warns
+    (:class:`DegradedDesignWarning`) or raises under ``strict=True``; the
+    one sanctioned silent case is a temporal design on a one-device host,
+    where the PE cascade degenerates to fused rounds on one chip with the
+    fusion depth (and the analytical model's single-chip prediction)
+    preserved.  The returned callable carries ``.path`` ("single_pe" or
+    "shard_map"), ``.backend``, ``.n_devices``, ``.devices_requested``,
+    and ``.degraded`` for reporting and cache keying.
     """
     it = spec.iterations if iterations is None else iterations
     avail = list(devices) if devices is not None else jax.devices()
-    n_dev = min(devices_needed(cfg), len(avail))
+    need = devices_needed(cfg)
+    n_dev = min(need, len(avail))
+    degraded = is_degraded(cfg, len(avail))
+    if degraded:
+        msg = degraded_message(cfg, len(avail))
+        if strict:
+            raise ValueError(msg)
+        warnings.warn(msg, DegradedDesignWarning, stacklevel=2)
 
     if n_dev <= 1:
         bk = resolve_backend(backend)
@@ -80,38 +187,31 @@ def build_batched_runner(
             )
 
         fn = jax.jit(jax.vmap(one_grid))
+
+        def stage(arrays: Mapping[str, jnp.ndarray]) -> dict:
+            return {
+                n: jax.device_put(jnp.asarray(arrays[n])) for n in spec.inputs
+            }
+
+        def dispatch(staged: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
+            return fn(dict(staged))
+
+        def finalize(out: jnp.ndarray) -> np.ndarray:
+            return np.asarray(out)
+
         path, mesh, n_used = "single_pe", None, 1
     else:
         bk = "shard_map"
-        fn = build_runner(
+        inner = build_runner(
             spec, cfg, iterations=it, devices=avail[:n_dev],
             tile_rows=tile_rows, batched=True,
         )
-        path, mesh, n_used = "shard_map", fn.mesh, n_dev
+        stage, dispatch, finalize = inner.stage, inner.dispatch, inner.finalize
+        path, mesh, n_used = "shard_map", inner.mesh, n_dev
 
     def run(arrays: Mapping[str, jnp.ndarray]) -> np.ndarray:
-        B = None
-        for n in spec.inputs:
-            if n not in arrays:
-                raise ValueError(
-                    f"batched runner missing input {n!r} "
-                    f"(spec inputs: {sorted(spec.inputs)})"
-                )
-            shape = tuple(jnp.shape(arrays[n]))
-            if len(shape) != spec.ndim + 1 or shape[1:] != tuple(spec.shape):
-                raise ValueError(
-                    f"batched runner expects {n} shaped (B,) + {spec.shape}, "
-                    f"got {shape}"
-                )
-            if B is None:
-                B = shape[0]
-            elif shape[0] != B:
-                raise ValueError(
-                    f"inconsistent batch sizes: {n} has B={shape[0]}, "
-                    f"expected {B}"
-                )
-        out = fn({n: jnp.asarray(arrays[n]) for n in spec.inputs})
-        return np.asarray(out)
+        validate_batch(spec, arrays)
+        return finalize(dispatch(stage(arrays)))
 
     run.spec = spec
     run.cfg = cfg
@@ -120,4 +220,84 @@ def build_batched_runner(
     run.backend = bk
     run.mesh = mesh
     run.n_devices = n_used
+    run.devices_requested = need
+    run.degraded = degraded
+    run.stage = stage
+    run.dispatch = dispatch
+    run.finalize = finalize
+    return run
+
+
+def build_bucket_runner(
+    spec: StencilSpec,
+    bucket_shape: Sequence[int],
+    cfg: ParallelismConfig,
+    iterations: int | None = None,
+    devices=None,
+    tile_rows: int = 64,
+    backend: str = "auto",
+    interpret: bool | None = None,
+    align_cols: int = 1,
+    strict: bool = False,
+    inner=None,
+):
+    """Pad-and-mask wrapper: a design compiled for ``bucket_shape`` serving
+    any grid ``<= bucket_shape`` with exact exterior-zero semantics.
+
+    The compiled artefact is a batched runner for the **masked bucket
+    spec** (:func:`repro.runtime.bucketing.bucket_spec`): inputs are
+    zero-padded up to the bucket and a mask input (1 on the real grid,
+    0 on the padding) is multiplied into every stage, so every fused
+    iteration re-imposes the real grid's zero exterior in-kernel.  Interior
+    results are bit-identical to executing the same design unpadded.
+
+    ``run(arrays)`` takes one uniform-shape batch ``{name: (B,) + grid}``
+    with ``grid <= bucket_shape`` per dimension and returns ``(B,) +
+    grid``.  Serving layers that mix grid shapes inside one micro-batch
+    pre-pad each entry (``repro.runtime.bucketing.pad_grid`` /
+    ``grid_mask_host``) and drive ``run.stage`` / ``run.dispatch`` /
+    ``run.finalize`` directly, slicing each entry's region out of the
+    bucket-shaped output.
+
+    Pass ``inner`` to wrap an already-compiled batched runner for the
+    masked bucket spec (the design-cache path) instead of compiling here.
+    """
+    bucket_shape = tuple(int(b) for b in bucket_shape)
+    mspec = bucket_spec(spec, bucket_shape)
+    mname = mask_input_name(spec)
+    if inner is None:
+        inner = build_batched_runner(
+            mspec, cfg, iterations=iterations, devices=devices,
+            tile_rows=tile_rows, backend=backend, interpret=interpret,
+            align_cols=align_cols, strict=strict,
+        )
+
+    def run(arrays: Mapping[str, np.ndarray]) -> np.ndarray:
+        B, grid = validate_batch(spec, arrays, exact=False)
+        padded = {
+            n: pad_batch(np.asarray(arrays[n]), bucket_shape)
+            for n in spec.inputs
+        }
+        mask = grid_mask_host(grid, bucket_shape, mspec.inputs[mname][0])
+        padded[mname] = np.broadcast_to(
+            mask[None], (B,) + bucket_shape
+        )
+        out = inner(padded)
+        return out[(slice(None),) + tuple(slice(0, g) for g in grid)]
+
+    run.spec = spec
+    run.masked_spec = mspec
+    run.mask_name = mname
+    run.bucket_shape = bucket_shape
+    run.inner = inner
+    run.cfg = inner.cfg
+    run.iterations = inner.iterations
+    run.path = inner.path
+    run.backend = inner.backend
+    run.n_devices = inner.n_devices
+    run.devices_requested = inner.devices_requested
+    run.degraded = inner.degraded
+    run.stage = inner.stage
+    run.dispatch = inner.dispatch
+    run.finalize = inner.finalize
     return run

@@ -1,0 +1,258 @@
+"""Shape bucketing: one compiled design serves a whole family of grid sizes.
+
+SASA's economics rest on amortizing one expensive artefact (the FPGA
+bitstream; here the auto-tuned jitted design) across many invocations.
+Compiling one design per *exact* grid shape breaks that the moment traffic
+carries heterogeneous geometries.  This module maps a requested grid shape
+onto a small ladder of padded canonical **bucket** shapes, so a kernel
+registration owns at most a handful of compiled designs (one per bucket
+actually hit) instead of one per distinct request shape.
+
+Two pieces:
+
+  * :class:`ShapeBucketer` — the bucket-ladder policy.  By default every
+    dimension rounds up to the next power of two (floored at ``min_size``);
+    alternatively callers supply an explicit per-dimension ladder of sizes.
+    **Trade-off:** a coarser ladder (pure powers of two) means fewer
+    compiled designs (less compile time, fewer cached executors) but more
+    padded cells per dispatch (wasted FLOPs and HBM traffic up to ~4x for a
+    2D grid just past a rung); a finer user ladder caps the padding waste
+    at the cost of more designs.  ``max_shape`` bounds the largest bucket
+    so one oversized request cannot force a huge compile.
+
+  * the **pad-and-mask spec transform** — :func:`bucket_spec` rewrites a
+    stencil spec onto the bucket shape and threads a streamed ``_mask``
+    input (1.0 on the real grid, 0.0 on the padding) *multiplied into
+    every stage*.  Because every executor (Pallas kernel, jnp fused
+    fallback, all shard_map variants) evaluates stages through the same
+    expression tree, the mask re-imposes the real grid's exterior-zero
+    boundary at every stage of every fused iteration, in-kernel — this is
+    the halo-padded-block trick of combined spatial/temporal blocking
+    schemes, applied at the whole-grid level.  Interior cells compute
+    ``expr * 1.0``, so results are bit-identical to running the unpadded
+    grid; padding cells compute ``expr * 0.0 == 0.0``, exactly the zeros
+    an unpadded run reads from its exterior.  Kernels whose padding cells
+    could compute non-finite values (a division by streamed data: 0/0 or
+    x/0 would survive the mask multiply as NaN) are rejected at transform
+    time — see :func:`check_maskable`; serve those exact-shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.core.spec import BinOp, Ref, StencilSpec, refs_in, walk
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    return 1 << (max(int(n), 1) - 1).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeBucketer:
+    """Maps a requested grid shape to a padded canonical bucket shape.
+
+    ``ladder`` — optional per-dimension rung lists; each dimension resolves
+    to its smallest rung >= the requested size (a request exceeding the top
+    rung raises).  Without a ladder, each dimension rounds up to the next
+    power of two, floored at ``min_size``.  ``max_shape`` (optional) caps
+    every bucket dimension; oversized requests raise instead of silently
+    compiling an unbounded design.
+    """
+
+    ladder: tuple[tuple[int, ...], ...] | None = None
+    min_size: int = 8
+    max_shape: tuple[int, ...] | None = None
+
+    def __post_init__(self):
+        if self.ladder is not None:
+            norm = tuple(
+                tuple(sorted(int(x) for x in dim)) for dim in self.ladder
+            )
+            for dim in norm:
+                if not dim or any(x < 1 for x in dim):
+                    raise ValueError(f"ladder rungs must be >= 1, got {dim}")
+            object.__setattr__(self, "ladder", norm)
+        if self.max_shape is not None:
+            object.__setattr__(
+                self, "max_shape", tuple(int(x) for x in self.max_shape)
+            )
+
+    def bucket_for(self, shape: Sequence[int]) -> tuple[int, ...]:
+        """The canonical bucket shape serving ``shape`` (>= it per dim)."""
+        shape = tuple(int(s) for s in shape)
+        if any(s < 1 for s in shape):
+            raise ValueError(f"grid shape must be positive, got {shape}")
+        if self.ladder is not None:
+            if len(self.ladder) != len(shape):
+                raise ValueError(
+                    f"{len(shape)}-D shape {shape} vs "
+                    f"{len(self.ladder)}-D bucket ladder"
+                )
+            bucket = []
+            for d, (size, rungs) in enumerate(zip(shape, self.ladder)):
+                for rung in rungs:
+                    if rung >= size:
+                        bucket.append(rung)
+                        break
+                else:
+                    raise ValueError(
+                        f"dim {d} size {size} exceeds the bucket ladder's "
+                        f"top rung {rungs[-1]}"
+                    )
+            bucket = tuple(bucket)
+        else:
+            bucket = tuple(max(next_pow2(s), self.min_size) for s in shape)
+        if self.max_shape is not None:
+            if len(self.max_shape) != len(bucket):
+                raise ValueError(
+                    f"{len(bucket)}-D shape {shape} vs "
+                    f"{len(self.max_shape)}-D max_shape"
+                )
+            if any(b > m for b, m in zip(bucket, self.max_shape)):
+                raise ValueError(
+                    f"shape {shape} buckets to {bucket}, exceeding "
+                    f"max_shape {self.max_shape}"
+                )
+        return bucket
+
+
+# --------------------------------------------------------------------------
+# Spec transforms: re-shape + in-kernel exterior-zero mask
+# --------------------------------------------------------------------------
+
+
+def with_shape(spec: StencilSpec, shape: Sequence[int]) -> StencilSpec:
+    """The same stencil structure declared on a different grid shape."""
+    shape = tuple(int(s) for s in shape)
+    if len(shape) != spec.ndim:
+        raise ValueError(
+            f"spec {spec.name!r} is {spec.ndim}-D, got shape {shape}"
+        )
+    inputs = {n: (dt, shape) for n, (dt, _) in spec.inputs.items()}
+    return dataclasses.replace(spec, inputs=inputs)
+
+
+def mask_input_name(spec: StencilSpec) -> str:
+    """Collision-free name for the streamed mask input of ``spec``."""
+    taken = set(spec.inputs) | {s.name for s in spec.stages}
+    name = "_mask"
+    while name in taken:
+        name += "_"
+    return name
+
+
+def check_maskable(spec: StencilSpec) -> None:
+    """Reject specs whose padding cells could compute non-finite values.
+
+    Masking relies on ``x * 0.0 == 0.0``, which fails for ``x`` = inf/NaN.
+    Padding cells hold zeros, so a stage that *divides by streamed data*
+    (any array reference in a denominator) can produce 0/0 or x/0 on the
+    padding; the resulting NaN survives the mask multiply and bleeds into
+    the real grid on the next iteration.  Such kernels must be served
+    exact-shape (division by constants — every kernel in the benchmark
+    suite — is fine).
+    """
+    for stage in spec.stages:
+        for node in walk(stage.expr):
+            if isinstance(node, BinOp) and node.op == "/":
+                denom_refs = refs_in(node.rhs)
+                if denom_refs:
+                    names = sorted({r.name for r in denom_refs})
+                    raise ValueError(
+                        f"spec {spec.name!r} stage {stage.name!r} divides "
+                        f"by streamed data ({', '.join(names)}): zero "
+                        "padding would produce non-finite values that "
+                        "survive the exterior mask, so this kernel cannot "
+                        "be shape-bucketed — serve it exact-shape instead"
+                    )
+
+
+def masked_spec(spec: StencilSpec) -> StencilSpec:
+    """Add a constant (non-iterated) mask input multiplied into every stage.
+
+    With the mask 1.0 on a subregion and 0.0 elsewhere, every stage's
+    writeback is zeroed outside the subregion at every iteration in every
+    executor, which reproduces the exterior-zero boundary of the subregion
+    exactly (local stages included: their padded-region values are zeroed
+    before any consumer reads them at an offset).  Raises for kernels
+    whose padding could turn non-finite (see :func:`check_maskable`).
+    """
+    check_maskable(spec)
+    mname = mask_input_name(spec)
+    mref = Ref(mname, (0,) * spec.ndim)
+    stages = tuple(
+        dataclasses.replace(st, expr=BinOp("*", st.expr, mref))
+        for st in spec.stages
+    )
+    inputs = dict(spec.inputs)
+    inputs[mname] = (spec.dtype, spec.shape)
+    out = dataclasses.replace(
+        spec, name=spec.name + "@masked", inputs=inputs, stages=stages
+    )
+    out.validate()
+    return out
+
+
+def bucket_spec(spec: StencilSpec, bucket_shape: Sequence[int]) -> StencilSpec:
+    """The masked bucket-shaped spec a bucket design is compiled from.
+
+    Per-request fit (grid <= bucket) is validated by the bucket runner;
+    the spec's own declared shape only contributes structure here.
+    """
+    return masked_spec(with_shape(spec, bucket_shape))
+
+
+# --------------------------------------------------------------------------
+# Host-side pad / mask helpers (numpy: used while staging micro-batches)
+# --------------------------------------------------------------------------
+
+
+def grid_mask_host(
+    shape: Sequence[int], bucket_shape: Sequence[int], dtype="float32"
+) -> np.ndarray:
+    """Bucket-shaped mask: 1 on the leading ``shape`` region, 0 on padding."""
+    shape, bucket_shape = tuple(shape), tuple(bucket_shape)
+    if len(shape) != len(bucket_shape) or any(
+        s > b for s, b in zip(shape, bucket_shape)
+    ):
+        raise ValueError(f"grid {shape} does not fit bucket {bucket_shape}")
+    m = np.zeros(bucket_shape, dtype=np.dtype(dtype))
+    m[tuple(slice(0, s) for s in shape)] = 1
+    return m
+
+
+def pad_grid(a: np.ndarray, bucket_shape: Sequence[int]) -> np.ndarray:
+    """Zero-pad one grid (no batch axis) up to the bucket shape."""
+    a = np.asarray(a)
+    bucket_shape = tuple(bucket_shape)
+    if a.ndim != len(bucket_shape) or any(
+        s > b for s, b in zip(a.shape, bucket_shape)
+    ):
+        raise ValueError(
+            f"grid shaped {a.shape} does not fit bucket {bucket_shape}"
+        )
+    if tuple(a.shape) == bucket_shape:
+        return a
+    return np.pad(a, [(0, b - s) for s, b in zip(a.shape, bucket_shape)])
+
+
+def pad_batch(a: np.ndarray, bucket_shape: Sequence[int]) -> np.ndarray:
+    """Zero-pad a batched array ``(B,) + grid`` up to ``(B,) + bucket``."""
+    a = np.asarray(a)
+    bucket_shape = tuple(bucket_shape)
+    if a.ndim != len(bucket_shape) + 1 or any(
+        s > b for s, b in zip(a.shape[1:], bucket_shape)
+    ):
+        raise ValueError(
+            f"batched array shaped {a.shape} does not fit (B,) + "
+            f"{bucket_shape}"
+        )
+    if tuple(a.shape[1:]) == bucket_shape:
+        return a
+    return np.pad(
+        a, [(0, 0)] + [(0, b - s) for s, b in zip(a.shape[1:], bucket_shape)]
+    )

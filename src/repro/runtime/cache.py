@@ -7,10 +7,19 @@ executor) pair: re-running ``autotune`` re-enumerates the design space and
 re-traces/re-compiles the shard_map/Pallas program, which at serving rates
 dwarfs the stencil itself.  ``DesignCache`` memoizes both levels:
 
-  * the *design* level — ``(spec fingerprint, platform, iterations)`` ->
-    ranked predictions + chosen :class:`ParallelismConfig`;
-  * the *runner* level — ``(spec fingerprint, ParallelismConfig, platform,
-    execution options)`` -> a compiled (optionally batched) runner.
+  * the *design* level — ``(structural fingerprint, shape, platform,
+    iterations)`` -> ranked predictions + chosen :class:`ParallelismConfig`;
+  * the *runner* level — ``(structural fingerprint, shape, config,
+    device pool, devices actually used, execution options)`` -> a compiled
+    (optionally batched) runner.
+
+Keys split the spec's **structural fingerprint** (everything but the grid
+shape) from the shape itself, so shape-bucketed serving — where one
+logical kernel owns a ladder of bucket designs (:class:`BucketedDesign`)
+— shares cache entries across registrations that differ only in declared
+grid size.  The device count a runner actually executes on is part of the
+key: a design built degraded on a small pool is never served to a larger
+pool (or vice versa) as if it owned its configured parallelism.
 
 Hits and misses are counted per key so serving surfaces can report cache
 behaviour (see ``StencilServer.stats``).
@@ -20,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import time
-from typing import Mapping
+from typing import Mapping, Sequence
 
 import jax
 
@@ -30,18 +39,35 @@ from repro.core.distribute import build_runner
 from repro.core.model import ParallelismConfig
 from repro.core.platform import DEFAULT_TPU, TPUPlatform
 from repro.core.spec import StencilSpec
-from repro.runtime.batching import build_batched_runner
+from repro.runtime.batching import (
+    build_batched_runner,
+    build_bucket_runner,
+    degraded_message,
+    is_degraded,
+)
+from repro.runtime.bucketing import ShapeBucketer, bucket_spec
 
 
-def spec_fingerprint(spec: StencilSpec) -> str:
-    """Stable (process-independent) content hash of a stencil spec."""
+def structural_fingerprint(spec: StencilSpec) -> str:
+    """Content hash of everything about a spec *except* its grid shape.
+
+    Two specs with equal structural fingerprints describe the same stencil
+    on (possibly) different grid sizes and can share bucket designs.
+    """
     payload = repr((
         spec.name,
         spec.iterations,
-        tuple((k, v[0], tuple(v[1])) for k, v in spec.inputs.items()),
+        spec.ndim,
+        tuple((k, v[0]) for k, v in spec.inputs.items()),
         spec.stages,
         spec.iterate_input,
     ))
+    return hashlib.sha1(payload.encode()).hexdigest()[:16]
+
+
+def spec_fingerprint(spec: StencilSpec) -> str:
+    """Stable (process-independent) content hash of a full stencil spec."""
+    payload = repr((structural_fingerprint(spec), tuple(spec.shape)))
     return hashlib.sha1(payload.encode()).hexdigest()[:16]
 
 
@@ -110,7 +136,10 @@ class DesignCache:
         """Cached ``autotune(..., build=False)``: ranked configs for a spec."""
         spec = _as_spec(source_or_spec)
         plat = _resolve_platform(platform, devices, clip_to_devices)
-        key = ("design", spec_fingerprint(spec), plat, iterations)
+        key = (
+            "design", structural_fingerprint(spec), tuple(spec.shape),
+            plat, iterations,
+        )
         st = self._stats.setdefault(key, KeyStats())
         if key in self._designs:
             st.hits += 1
@@ -139,20 +168,31 @@ class DesignCache:
         backend: str = "auto",
         align_cols: int = 1,
         batched: bool = True,
+        strict: bool = False,
     ):
         """Cached runner for ``(spec, cfg, platform, options)``.
 
         ``batched=True`` compiles the serving runner (leading batch axis);
         ``batched=False`` compiles the classic per-grid runner with the
-        ``autotune`` contract.
+        ``autotune`` contract.  The key includes the device count the
+        runner will actually occupy, so a degraded build (pool smaller
+        than the config) is re-examined — not silently reused — when the
+        pool changes.  ``strict`` is enforced *before* the lookup (it only
+        changes behaviour for degraded configs), so strict and non-strict
+        callers share cache entries.
         """
+        n_avail = len(devices) if devices is not None else len(jax.devices())
+        n_used = min(cfg.devices_needed, n_avail)
+        if strict and is_degraded(cfg, n_avail):
+            raise ValueError(degraded_message(cfg, n_avail))
         dev_key = (
             tuple(str(d) for d in devices) if devices is not None
-            else ("default", len(jax.devices()), jax.default_backend())
+            else ("default", n_avail, jax.default_backend())
         )
         key = (
-            "runner", spec_fingerprint(spec), cfg, dev_key,
-            iterations, tile_rows, backend, align_cols, batched,
+            "runner", structural_fingerprint(spec), tuple(spec.shape), cfg,
+            dev_key, n_used, iterations, tile_rows, backend, align_cols,
+            batched,
         )
         st = self._stats.setdefault(key, KeyStats())
         if key in self._runners:
@@ -199,6 +239,7 @@ class DesignCache:
         backend: str = "auto",
         align_cols: int = 1,
         batched: bool = True,
+        strict: bool = False,
     ) -> CachedDesign:
         """Rank (cached) then compile (cached) the best feasible design.
 
@@ -224,7 +265,7 @@ class DesignCache:
                 run = self.runner(
                     spec, pred.config, iterations=iterations, devices=devices,
                     tile_rows=tile_rows, backend=backend,
-                    align_cols=align_cols, batched=batched,
+                    align_cols=align_cols, batched=batched, strict=strict,
                 )
                 chosen = pred
                 break
@@ -238,6 +279,43 @@ class DesignCache:
             key=("combined", fp),
             build_time_s=self._total_build_s() - before_build_s,
             hit=(self.misses == before_miss),
+        )
+
+    # ------------------------------------------------------------------
+    # bucketed registration (multi-geometry serving)
+    # ------------------------------------------------------------------
+
+    def bucketed(
+        self,
+        source_or_spec,
+        bucketer: ShapeBucketer | None = None,
+        platform: TPUPlatform | None = None,
+        iterations: int | None = None,
+        devices=None,
+        tile_rows: int = 64,
+        backend: str = "auto",
+        align_cols: int = 1,
+        strict: bool = False,
+    ) -> "BucketedDesign":
+        """Register one logical kernel served across many grid shapes.
+
+        The returned :class:`BucketedDesign` lazily owns a ladder of
+        bucket designs (one auto-tuned, compiled, masked design per bucket
+        shape actually requested), all memoized through this cache — so a
+        second registration of a structurally identical kernel, even with
+        a different declared grid size, reuses every compiled bucket.
+        """
+        return BucketedDesign(
+            cache=self,
+            spec=_as_spec(source_or_spec),
+            bucketer=bucketer if bucketer is not None else ShapeBucketer(),
+            platform=platform,
+            iterations=iterations,
+            devices=devices,
+            tile_rows=tile_rows,
+            backend=backend,
+            align_cols=align_cols,
+            strict=strict,
         )
 
     # ------------------------------------------------------------------
@@ -266,6 +344,120 @@ class DesignCache:
         self._runners.clear()
         self._failed.clear()
         self._stats.clear()
+
+
+# --------------------------------------------------------------------------
+# Bucketed registration: one logical kernel, a ladder of bucket designs
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BucketStats:
+    """Per-bucket serving counters of one logical registration."""
+
+    hits: int = 0              # runner_for calls served by an existing bucket
+    misses: int = 0            # runner_for calls that had to build the bucket
+    requests: int = 0          # grids routed to this bucket
+    build_time_s: float = 0.0  # rank + jit time paid by this registration
+    cache_hit: bool = False    # the bucket's design came fully from the cache
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class BucketEntry:
+    """One rung of a registration's bucket ladder."""
+
+    bucket: tuple[int, ...]
+    runner: object             # build_bucket_runner result (pad+mask wrapper)
+    cached: CachedDesign       # the underlying masked bucket design
+    stats: BucketStats
+
+    @property
+    def config(self) -> ParallelismConfig:
+        return self.cached.design.config
+
+
+class BucketedDesign:
+    """One logical kernel registration owning a ladder of bucket designs.
+
+    ``runner_for(shape)`` maps a grid shape to its bucket (via the
+    :class:`ShapeBucketer` policy), auto-tunes and compiles that bucket's
+    masked design on first use (both levels memoized in the shared
+    :class:`DesignCache`), and returns the :class:`BucketEntry` whose
+    pad-and-mask runner serves the shape.  Per-bucket hit counters live in
+    ``BucketEntry.stats`` / :meth:`stats`.
+    """
+
+    def __init__(
+        self, cache: DesignCache, spec: StencilSpec,
+        bucketer: ShapeBucketer, platform=None, iterations=None,
+        devices=None, tile_rows: int = 64, backend: str = "auto",
+        align_cols: int = 1, strict: bool = False,
+    ):
+        self.cache = cache
+        self.spec = spec
+        self.bucketer = bucketer
+        self.platform = platform
+        self.iterations = iterations
+        self.devices = devices
+        self.tile_rows = tile_rows
+        self.backend = backend
+        self.align_cols = align_cols
+        self.strict = strict
+        self.structural = structural_fingerprint(spec)
+        self._entries: dict[tuple[int, ...], BucketEntry] = {}
+
+    def bucket_for(self, shape: Sequence[int]) -> tuple[int, ...]:
+        return self.bucketer.bucket_for(shape)
+
+    def runner_for(self, shape: Sequence[int], count: int = 1) -> BucketEntry:
+        """The bucket entry serving ``shape`` (built and memoized on first
+        use); ``count`` grids are attributed to the bucket's counters."""
+        bucket = self.bucket_for(shape)
+        entry = self._entries.get(bucket)
+        if entry is not None:
+            entry.stats.hits += 1
+            entry.stats.requests += count
+            return entry
+        bspec = bucket_spec(self.spec, bucket)
+        t0 = time.perf_counter()
+        cached = self.cache.get_or_build(
+            bspec, platform=self.platform, iterations=self.iterations,
+            devices=self.devices, tile_rows=self.tile_rows,
+            backend=self.backend, align_cols=self.align_cols,
+            strict=self.strict,
+        )
+        wrapped = build_bucket_runner(
+            self.spec, bucket, cached.design.config,
+            iterations=self.iterations, inner=cached.runner,
+        )
+        stats = BucketStats(
+            misses=1, requests=count,
+            build_time_s=0.0 if cached.hit else time.perf_counter() - t0,
+            cache_hit=cached.hit,
+        )
+        entry = BucketEntry(
+            bucket=bucket, runner=wrapped, cached=cached, stats=stats
+        )
+        self._entries[bucket] = entry
+        return entry
+
+    def run(self, shape, arrays) -> "np.ndarray":
+        """Convenience: serve one uniform-shape batch through its bucket."""
+        return self.runner_for(shape).runner(arrays)
+
+    @property
+    def buckets(self) -> dict[tuple[int, ...], BucketEntry]:
+        return dict(self._entries)
+
+    @property
+    def num_buckets(self) -> int:
+        return len(self._entries)
+
+    def stats(self) -> dict[tuple[int, ...], dict]:
+        return {b: e.stats.as_dict() for b, e in self._entries.items()}
 
 
 _DEFAULT_CACHE = DesignCache()

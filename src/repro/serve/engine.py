@@ -1,4 +1,5 @@
-"""Stencil serving engine: micro-batched dispatch of cached compiled designs.
+"""Stencil serving engine: micro-batched, bucketed, async-dispatched
+execution of cached compiled designs.
 
 The production-facing front of the runtime subsystem.  A server owns a
 :class:`repro.runtime.DesignCache`; clients register stencil designs (DSL
@@ -6,40 +7,72 @@ text or :class:`StencilSpec`) and then submit grids.  The serving flow is
 
   register(name, dsl)  ── autotune (ranking cached) ── compile batched
                           runner (jit cached) ── optional warmup dispatch
-  submit(name, arrays) ── queued
-  flush()              ── queued requests grouped by design, chunked into
-                          micro-batches of ``max_batch`` grids, padded to
-                          a fixed bucket size, dispatched, unpadded
+  submit(name, arrays) ── validated, queued (thread-safe)
+  flush()              ── queued requests grouped by design (and, with
+                          bucketing, by bucket shape), chunked into
+                          micro-batches of ``max_batch`` grids, staged to
+                          device, dispatched through a bounded in-flight
+                          queue, unpadded
+
+**Shape bucketing** (``bucketing=True`` or a
+:class:`repro.runtime.ShapeBucketer`): a registered design is a *logical*
+kernel that serves any grid shape its bucketer accepts.  Each request is
+routed to a padded canonical bucket; one masked design per bucket is
+auto-tuned and compiled on first use (all memoized in the shared cache),
+and grids of different sizes sharing a bucket ride the same micro-batch,
+each carrying its own exterior-zero mask.  Without bucketing, requests
+must match the registered spec's exact shape (the pre-bucketing
+contract).
+
+**Async double-buffered dispatch** (``async_dispatch=True``, the
+default): each micro-batch is staged (host stack/pad + ``jax.device_put``)
+and dispatched without blocking; the host then stages micro-batch N+1
+while the device executes micro-batch N, and only blocks
+(``jax.block_until_ready`` via the runner's ``finalize``) when the
+bounded in-flight queue (``max_inflight``) is full or the flush drains.
+``async_dispatch=False`` restores strictly synchronous dispatch for
+debugging/benchmark baselines; results are identical either way.
 
 **Batch-axis semantics** (shared with :mod:`repro.runtime.batching`): one
-dispatch evaluates ``(B,) + spec.shape`` arrays where the B grids are
+dispatch evaluates ``(B,) + bucket_shape`` arrays where the B grids are
 fully independent — no halo exchange, reduction, or any other coupling
-crosses the batch axis, and the exterior-zero boundary applies per grid.
-All grids in one dispatch share the design's spec (shape, dtype,
-iterations); requests for different designs never share a batch.  Short
-final chunks are padded by repeating the first grid of the chunk up to
-the compiled bucket size (so a design compiles exactly one batched
+crosses the batch axis, and the exterior-zero boundary applies per grid
+(per *real* grid under bucketing, via the streamed mask).  Requests for
+different designs never share a batch.  Short final chunks are padded up
+to the compiled batch size (so a design compiles exactly one batched
 program) and the padding's outputs are discarded.
 
 Per-design counters (``stats()``): requests served, batches dispatched,
 design-cache hit/miss for the register call, compile/warmup seconds,
-execution latency (count / total / mean / max seconds), and requests
-lost to dispatch faults (whose tickets resolve via ``failures``).
+execution latency (count / total / mean / max seconds; under async
+dispatch this is staging-to-completion latency and overlapping batches'
+latencies overlap too), requests lost to dispatch faults (whose tickets
+resolve via ``failures``), and — for bucketed designs — per-bucket
+hit/miss/request counters.
 
 The LM token-serving engine lives in :mod:`repro.serve.lm`; its classes
 are re-exported here for backward compatibility.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import threading
 import time
 from typing import Mapping
 
+import jax
 import numpy as np
 
 # backward-compatible re-exports (pre-runtime engine.py held the LM engine)
 from repro.serve.lm import Request, ServeEngine  # noqa: F401
-from repro.runtime.cache import DesignCache, default_cache
+from repro.runtime.bucketing import ShapeBucketer, grid_mask_host, pad_grid
+from repro.runtime.cache import (
+    BucketedDesign,
+    DesignCache,
+    default_cache,
+    structural_fingerprint,
+)
 
 
 @dataclasses.dataclass
@@ -47,7 +80,7 @@ class StencilRequest:
     """One grid to evaluate under a registered design."""
 
     design: str
-    arrays: Mapping[str, np.ndarray]   # each shaped spec.shape
+    arrays: Mapping[str, np.ndarray]   # each shaped like one grid
 
 
 @dataclasses.dataclass
@@ -57,7 +90,7 @@ class DesignCounters:
     warmup_time_s: float = 0.0
     requests: int = 0
     batches: int = 0
-    padded_grids: int = 0              # throwaway grids added for bucketing
+    padded_grids: int = 0              # throwaway grids added for batch pad
     failed_requests: int = 0           # requests lost to dispatch faults
     exec_count: int = 0
     exec_total_s: float = 0.0
@@ -76,17 +109,40 @@ class DesignCounters:
 @dataclasses.dataclass
 class _Registered:
     name: str
-    cached: object                     # runtime.cache.CachedDesign
+    cached: object          # runtime CachedDesign, or BucketedDesign
     counters: DesignCounters
     iterations: int | None = None      # as passed at register time
 
     @property
+    def bucketed(self) -> bool:
+        return isinstance(self.cached, BucketedDesign)
+
+    @property
     def spec(self):
-        return self.cached.design.spec
+        return self.cached.spec if self.bucketed else self.cached.design.spec
 
     @property
     def config(self):
-        return self.cached.design.config
+        """The chosen config (exact mode) or per-bucket configs (bucketed)."""
+        if not self.bucketed:
+            return self.cached.design.config
+        return {b: e.config for b, e in self.cached.buckets.items()}
+
+    def bucket_for(self, shape):
+        return self.cached.bucket_for(shape)
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """A dispatched, not-yet-materialised micro-batch."""
+
+    reg: _Registered
+    items: list                       # [(ticket, request, shape), ...]
+    out: object                       # device array (possibly still computing)
+    finalize: object                  # runner.finalize: device -> np, blocks
+    post: object                      # np batch -> {ticket: np grid}
+    pad: int
+    t0: float
 
 
 class StencilServer:
@@ -94,7 +150,11 @@ class StencilServer:
 
     ``max_batch`` bounds grids per dispatch.  ``warmup=True`` (default)
     pushes one zero batch through a freshly compiled design at register
-    time so the first real request never pays the compile.
+    time so the first real request never pays the compile.  ``bucketing``
+    (True / a :class:`ShapeBucketer`) turns registrations into
+    multi-geometry logical kernels; ``async_dispatch`` + ``max_inflight``
+    control the double-buffered dispatch loop; ``strict`` refuses (rather
+    than warns about) designs degraded by a too-small device pool.
     """
 
     def __init__(
@@ -106,8 +166,13 @@ class StencilServer:
         warmup: bool = True,
         backend: str = "auto",
         tile_rows: int = 64,
+        bucketing: bool | ShapeBucketer | None = None,
+        async_dispatch: bool = True,
+        max_inflight: int = 2,
+        strict: bool = False,
     ):
         assert max_batch >= 1
+        assert max_inflight >= 1
         self.max_batch = max_batch
         self.platform = platform
         self.devices = devices
@@ -115,8 +180,13 @@ class StencilServer:
         self.warmup = warmup
         self.backend = backend
         self.tile_rows = tile_rows
+        self.bucketing = bucketing
+        self.async_dispatch = async_dispatch
+        self.max_inflight = max_inflight
+        self.strict = strict
         self._designs: dict[str, _Registered] = {}
-        self._queue: list[tuple[int, StencilRequest]] = []
+        self._queue: list[tuple[int, StencilRequest, tuple]] = []
+        self._lock = threading.Lock()
         self.failures: dict[int, Exception] = {}   # ticket -> dispatch fault
         self.completed: dict[int, np.ndarray] = {}  # ticket -> result
         self._next_ticket = 0
@@ -125,30 +195,85 @@ class StencilServer:
     # design registration
     # ------------------------------------------------------------------
 
+    def _bucketer_for(self, bucketing) -> ShapeBucketer | None:
+        b = self.bucketing if bucketing is None else bucketing
+        if not b:
+            return None
+        return b if isinstance(b, ShapeBucketer) else ShapeBucketer()
+
     def register(
-        self, name: str, source_or_spec, iterations: int | None = None
+        self,
+        name: str,
+        source_or_spec,
+        iterations: int | None = None,
+        bucketing: bool | ShapeBucketer | None = None,
     ) -> _Registered:
         """Auto-tune + compile (both through the design cache) and warm up.
 
-        Re-registering a name with the same spec and iterations is
-        idempotent; re-registering it with a different one raises.
+        With bucketing (per-call override of the server default), the
+        registration is a logical kernel: only the bucket containing the
+        spec's declared shape is compiled/warmed now, further buckets
+        lazily on first request.  Re-registering a name with the same
+        design and iterations is idempotent; re-registering it with a
+        different one raises.
         """
+        bucketer = self._bucketer_for(bucketing)
         if name in self._designs:
             existing = self._designs[name]
             from repro.runtime.cache import _as_spec, spec_fingerprint
 
-            fp = spec_fingerprint(_as_spec(source_or_spec))
-            if (fp != existing.cached.fingerprint
-                    or iterations != existing.iterations):
+            spec = _as_spec(source_or_spec)
+            # bucketed designs are shape-agnostic: compare structure only
+            fp = (structural_fingerprint(spec) if existing.bucketed
+                  else spec_fingerprint(spec))
+            have = (existing.cached.structural if existing.bucketed
+                    else existing.cached.fingerprint)
+            policy_changed = (
+                existing.bucketed != bool(bucketer)
+                or (existing.bucketed
+                    and existing.cached.bucketer != bucketer)
+            )
+            if fp != have or iterations != existing.iterations \
+                    or policy_changed:
                 raise ValueError(
                     f"design {name!r} is already registered with a "
-                    "different spec or iteration count; pick a new name"
+                    "different spec, iteration count, or bucketing "
+                    "policy; pick a new name"
                 )
             return existing
+
+        if bucketer is not None:
+            bucketed = self.cache.bucketed(
+                source_or_spec, bucketer=bucketer, platform=self.platform,
+                iterations=iterations, devices=self.devices,
+                tile_rows=self.tile_rows, backend=self.backend,
+                strict=self.strict,
+            )
+            entry = bucketed.runner_for(bucketed.spec.shape, count=0)
+            ctr = DesignCounters(
+                cache_hit=entry.stats.cache_hit,
+                build_time_s=entry.stats.build_time_s,
+            )
+            reg = _Registered(
+                name=name, cached=bucketed, counters=ctr,
+                iterations=iterations,
+            )
+            if self.warmup:
+                spec = bucketed.spec
+                zeros = {
+                    n: np.zeros((self.max_batch,) + tuple(shape), dtype=dt)
+                    for n, (dt, shape) in spec.inputs.items()
+                }
+                t0 = time.perf_counter()
+                entry.runner(zeros)
+                ctr.warmup_time_s = time.perf_counter() - t0
+            self._designs[name] = reg
+            return reg
+
         cached = self.cache.get_or_build(
             source_or_spec, platform=self.platform, iterations=iterations,
             devices=self.devices, tile_rows=self.tile_rows,
-            backend=self.backend,
+            backend=self.backend, strict=self.strict,
         )
         ctr = DesignCounters(
             cache_hit=cached.hit,
@@ -183,55 +308,126 @@ class StencilServer:
         """Queue one grid; returns a ticket resolved by the next flush().
 
         Requests are validated here (input names + grid shapes against
-        the registered spec), so a malformed request is rejected at
-        submit time instead of poisoning a later batch.
+        the registered spec, bucketability under bucketing), so a
+        malformed request is rejected at submit time instead of poisoning
+        a later batch.  Safe to call from multiple threads.
         """
         if request.design not in self._designs:
             raise KeyError(
                 f"design {request.design!r} is not registered "
                 f"(have {sorted(self._designs)})"
             )
-        spec = self._designs[request.design].spec
-        for n, (_, shape) in spec.inputs.items():
+        reg = self._designs[request.design]
+        spec = reg.spec
+        unknown = sorted(set(request.arrays) - set(spec.inputs))
+        if unknown:
+            raise ValueError(
+                f"request for {request.design!r} has unknown input(s) "
+                f"{unknown} (spec inputs: {sorted(spec.inputs)})"
+            )
+        shape = None
+        for n, (_, declared) in spec.inputs.items():
             if n not in request.arrays:
                 raise ValueError(
                     f"request for {request.design!r} is missing input {n!r}"
                 )
             got = tuple(np.shape(request.arrays[n]))
-            if got != tuple(shape):
+            if reg.bucketed:
+                if shape is None:
+                    if len(got) != spec.ndim:
+                        raise ValueError(
+                            f"request for {request.design!r}: {n} must be a "
+                            f"{spec.ndim}-D grid, got shape {got}"
+                        )
+                    shape = got
+                elif got != shape:
+                    raise ValueError(
+                        f"request for {request.design!r}: inconsistent grid "
+                        f"shapes ({n} is {got}, expected {shape})"
+                    )
+            elif got != tuple(declared):
                 raise ValueError(
                     f"request for {request.design!r}: {n} must be shaped "
-                    f"{tuple(shape)}, got {got}"
+                    f"{tuple(declared)}, got {got}"
                 )
-        ticket = self._next_ticket
-        self._next_ticket += 1
-        self._queue.append((ticket, request))
+            else:
+                shape = got
+        if reg.bucketed:
+            try:
+                reg.bucket_for(shape)     # raises if unservable
+            except ValueError as e:
+                raise ValueError(
+                    f"request for {request.design!r} is not bucketable: {e}"
+                ) from e
+        with self._lock:
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            self._queue.append((ticket, request, shape))
         return ticket
 
     def flush(self) -> dict[int, np.ndarray]:
-        """Dispatch every queued request in design-grouped micro-batches.
+        """Dispatch every queued request, micro-batched per design/bucket.
 
-        A dispatch fault in one micro-batch never drops other requests:
-        every chunk is attempted, successful results are returned (and
-        retained in ``self.completed`` until claimed), and the failed
-        chunk's tickets land in ``self.failures`` (ticket -> exception)
-        instead of resolving.
+        The dispatch loop is double-buffered: while the device executes
+        one micro-batch, the host stages the next; completed batches are
+        only materialised when the bounded in-flight queue is full or the
+        queue drains.  A dispatch fault in one micro-batch never drops
+        other requests: every chunk is attempted, successful results are
+        returned (and retained in ``self.completed`` until claimed), and
+        the failed chunk's tickets land in ``self.failures`` (ticket ->
+        exception) instead of resolving.
         """
-        by_design: dict[str, list[tuple[int, StencilRequest]]] = {}
-        for ticket, req in self._queue:
-            by_design.setdefault(req.design, []).append((ticket, req))
-        self._queue.clear()
+        with self._lock:
+            queue, self._queue = self._queue, []
+        groups: dict[tuple, list] = {}
+        for ticket, req, shape in queue:
+            reg = self._designs[req.design]
+            bucket = reg.bucket_for(shape) if reg.bucketed else None
+            groups.setdefault((req.design, bucket), []).append(
+                (ticket, req, shape)
+            )
         results: dict[int, np.ndarray] = {}
-        for name, items in by_design.items():
+        inflight: collections.deque[_InFlight] = collections.deque()
+        for (name, bucket), items in groups.items():
             reg = self._designs[name]
             for lo in range(0, len(items), self.max_batch):
                 chunk = items[lo:lo + self.max_batch]
+                while len(inflight) >= self.max_inflight:
+                    self._resolve(inflight.popleft(), results)
+                t0 = time.perf_counter()
                 try:
-                    results.update(self._dispatch(reg, chunk))
+                    runner, stacked, post, pad = self._prepare(
+                        reg, bucket, chunk
+                    )
+                    chain = (
+                        callable(getattr(runner, "stage", None))
+                        and callable(getattr(runner, "dispatch", None))
+                        and callable(getattr(runner, "finalize", None))
+                    )
+                    if bucket is None and not chain:
+                        # legacy / monkeypatched runner: plain callable
+                        out = np.asarray(runner(stacked))
+                        self._account(reg, chunk, pad,
+                                      time.perf_counter() - t0)
+                        results.update(post(out))
+                    elif self.async_dispatch:
+                        out = runner.dispatch(runner.stage(stacked))
+                        inflight.append(_InFlight(
+                            reg=reg, items=chunk, out=out,
+                            finalize=runner.finalize, post=post, pad=pad,
+                            t0=t0,
+                        ))
+                    else:
+                        out = runner.finalize(
+                            runner.dispatch(runner.stage(stacked))
+                        )
+                        self._account(reg, chunk, pad,
+                                      time.perf_counter() - t0)
+                        results.update(post(out))
                 except Exception as e:
-                    reg.counters.failed_requests += len(chunk)
-                    for ticket, _ in chunk:
-                        self.failures[ticket] = e
+                    self._fail(reg, chunk, e)
+        while inflight:
+            self._resolve(inflight.popleft(), results)
         self.completed.update(results)
         return results
 
@@ -252,29 +448,83 @@ class StencilServer:
             ) from self.failures[failed[0]]
         return [self.completed.pop(t) for t in tickets]
 
-    def _dispatch(self, reg: _Registered, chunk) -> dict[int, np.ndarray]:
+    # ------------------------------------------------------------------
+    # dispatch internals
+    # ------------------------------------------------------------------
+
+    def _prepare(self, reg: _Registered, bucket, chunk):
+        """Host-side staging: stack (and under bucketing pad + mask) one
+        micro-batch; returns (runner, stacked arrays, post, pad count)."""
         spec = reg.spec
         n = len(chunk)
-        # pad to the full compiled bucket: one batched program per design
         pad = self.max_batch - n
-        stacked = {
-            name: np.stack(
-                [np.asarray(req.arrays[name]) for _, req in chunk]
-                + [np.asarray(chunk[0][1].arrays[name])] * pad
-            )
-            for name in spec.inputs
-        }
-        t0 = time.perf_counter()
-        out = reg.cached.runner(stacked)
-        dt = time.perf_counter() - t0
+        if bucket is None:
+            # exact-shape mode: pad the batch by repeating the first grid
+            # (one compiled program per design)
+            runner = reg.cached.runner
+            stacked = {
+                name: np.stack(
+                    [np.asarray(req.arrays[name]) for _, req, _ in chunk]
+                    + [np.asarray(chunk[0][1].arrays[name])] * pad
+                )
+                for name in spec.inputs
+            }
+
+            def post(out):
+                return {t: out[i] for i, (t, _, _) in enumerate(chunk)}
+
+            return runner, stacked, post, pad
+
+        entry = reg.cached.runner_for(bucket, count=n)
+        runner = entry.runner
+        mname = runner.mask_name
+        mdtype = runner.masked_spec.inputs[mname][0]
+        stacked = {}
+        for name in spec.inputs:
+            grids = [
+                pad_grid(np.asarray(req.arrays[name]), bucket)
+                for _, req, _ in chunk
+            ]
+            grids += [np.zeros(bucket, grids[0].dtype)] * pad
+            stacked[name] = np.stack(grids)
+        # per-entry masks: grids of different shapes share the batch, and
+        # batch-padding entries carry an all-zero mask (outputs zero)
+        masks = [grid_mask_host(shape, bucket, mdtype) for _, _, shape in chunk]
+        masks += [np.zeros(bucket, np.dtype(mdtype))] * pad
+        stacked[mname] = np.stack(masks)
+
+        def post(out):
+            return {
+                t: out[i][tuple(slice(0, d) for d in shape)]
+                for i, (t, _, shape) in enumerate(chunk)
+            }
+
+        return runner, stacked, post, pad
+
+    def _resolve(self, infl: _InFlight, results: dict) -> None:
+        """Block on one in-flight micro-batch and resolve its tickets."""
+        try:
+            jax.block_until_ready(infl.out)
+            out = infl.finalize(infl.out)
+            self._account(infl.reg, infl.items, infl.pad,
+                          time.perf_counter() - infl.t0)
+            results.update(infl.post(out))
+        except Exception as e:
+            self._fail(infl.reg, infl.items, e)
+
+    def _account(self, reg: _Registered, chunk, pad: int, dt: float) -> None:
         ctr = reg.counters
-        ctr.requests += n
+        ctr.requests += len(chunk)
         ctr.batches += 1
         ctr.padded_grids += pad
         ctr.exec_count += 1
         ctr.exec_total_s += dt
         ctr.exec_max_s = max(ctr.exec_max_s, dt)
-        return {ticket: out[i] for i, (ticket, _) in enumerate(chunk)}
+
+    def _fail(self, reg: _Registered, chunk, exc: Exception) -> None:
+        reg.counters.failed_requests += len(chunk)
+        for ticket, _, _ in chunk:
+            self.failures[ticket] = exc
 
     # ------------------------------------------------------------------
     # introspection
@@ -282,7 +532,16 @@ class StencilServer:
 
     def stats(self) -> dict[str, dict]:
         """Per-design counters plus the shared cache's global hit/miss."""
-        out = {n: r.counters.as_dict() for n, r in self._designs.items()}
+        out = {}
+        for n, r in self._designs.items():
+            d = r.counters.as_dict()
+            if r.bucketed:
+                d["buckets"] = {
+                    "x".join(map(str, b)): s
+                    for b, s in r.cached.stats().items()
+                }
+                d["compiled_buckets"] = r.cached.num_buckets
+            out[n] = d
         out["_cache"] = {
             "hits": self.cache.hits,
             "misses": self.cache.misses,

@@ -1,0 +1,301 @@
+"""Shape bucketing: ladder policy, pad-and-mask equivalence, cache sharing.
+
+The correctness core of multi-geometry serving: a design compiled for a
+padded canonical bucket shape must serve any smaller grid with the exact
+exterior-zero semantics of :func:`repro.kernels.ref.stencil_iterations_ref`,
+across every parallelism variant.  In-process tests exercise the (possibly
+degraded-to-single-PE) executor paths on the host's single device; the
+real 8-device shard_map paths are covered by ``_multidevice_main.py``.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.configs import stencils
+from repro.core import autotune
+from repro.core.model import VARIANTS, ParallelismConfig
+from repro.kernels import ref
+from repro.runtime import (
+    DesignCache,
+    ShapeBucketer,
+    build_bucket_runner,
+    bucket_spec,
+    mask_input_name,
+    masked_spec,
+    structural_fingerprint,
+    with_shape,
+)
+
+RNG = np.random.default_rng(17)
+
+# several in-process cases run spatial/hybrid configs on the 1-device host,
+# which (deliberately) warns about the degraded parallelism
+pytestmark = pytest.mark.filterwarnings(
+    "ignore::repro.runtime.batching.DegradedDesignWarning"
+)
+
+
+def batch_for(spec, B, shape=None):
+    shape = tuple(spec.shape) if shape is None else tuple(shape)
+    return {
+        n: RNG.standard_normal((B,) + shape).astype(dt)
+        for n, (dt, _) in spec.inputs.items()
+    }
+
+
+def oracle(spec, arrays_b, iters, b):
+    one = {n: jnp.asarray(a[b]) for n, a in arrays_b.items()}
+    return np.asarray(ref.stencil_iterations_ref(spec, one, iters))
+
+
+# ---------------------------------------------------------------------------
+# ShapeBucketer policy
+# ---------------------------------------------------------------------------
+
+
+def test_pow2_bucketing():
+    b = ShapeBucketer()
+    assert b.bucket_for((20, 13)) == (32, 16)
+    assert b.bucket_for((32, 16)) == (32, 16)     # idempotent
+    assert b.bucket_for((3, 2)) == (8, 8)         # min_size floor
+    assert b.bucket_for((33, 129, 5)) == (64, 256, 8)
+
+
+def test_user_ladder():
+    b = ShapeBucketer(ladder=((16, 64, 720), (128, 1024)))
+    assert b.bucket_for((10, 100)) == (16, 128)
+    assert b.bucket_for((65, 1024)) == (720, 1024)
+    with pytest.raises(ValueError, match="top rung"):
+        b.bucket_for((721, 100))
+    with pytest.raises(ValueError, match="bucket ladder"):
+        b.bucket_for((10, 10, 10))                # wrong arity
+
+
+def test_max_shape_cap():
+    b = ShapeBucketer(max_shape=(64, 64))
+    assert b.bucket_for((60, 60)) == (64, 64)
+    with pytest.raises(ValueError, match="max_shape"):
+        b.bucket_for((65, 8))
+
+
+def test_bucketer_rejects_nonpositive():
+    with pytest.raises(ValueError, match="positive"):
+        ShapeBucketer().bucket_for((0, 8))
+
+
+# ---------------------------------------------------------------------------
+# spec transforms
+# ---------------------------------------------------------------------------
+
+
+def test_with_shape_keeps_structure():
+    a = stencils.jacobi2d(shape=(16, 8), iterations=2)
+    b = with_shape(a, (32, 16))
+    assert b.shape == (32, 16)
+    assert structural_fingerprint(a) == structural_fingerprint(b)
+    with pytest.raises(ValueError, match="2-D"):
+        with_shape(a, (32, 16, 4))
+
+
+def test_masked_spec_adds_mask_input():
+    spec = stencils.hotspot(shape=(16, 8), iterations=2)
+    m = masked_spec(spec)
+    mname = mask_input_name(spec)
+    assert mname in m.inputs and mname not in spec.inputs
+    assert m.iterate_input == spec.iterate_input
+    assert m.radius == spec.radius          # mask taps at offset 0 only
+    m.validate()
+
+
+def test_masked_spec_rejects_division_by_streamed_data():
+    """Zero padding would turn x/0 into NaN, which survives the exterior
+    mask — such kernels must be refused, not silently corrupted."""
+    from repro.core.dsl import parse
+
+    spec = parse("""
+kernel: RATIO
+iteration: 2
+input float: in_1(16, 8)
+input float: in_2(16, 8)
+output float: out_1(0,0) = in_1(0,0) / (in_2(0,0) + 1)
+""")
+    with pytest.raises(ValueError, match="divides by streamed data"):
+        masked_spec(spec)
+    with pytest.raises(ValueError, match="cannot be shape-bucketed"):
+        bucket_spec(spec, (32, 16))
+    # division by constants stays fine (the whole benchmark suite)
+    masked_spec(stencils.jacobi2d(shape=(16, 8), iterations=2))
+
+
+def test_autotune_bucket_runner_rejects_unknown_inputs():
+    """The bucket-aware autotune wrapper must not pre-filter a typo'd
+    array name into silence."""
+    cache = DesignCache()
+    spec = stencils.jacobi2d(shape=(16, 8), iterations=2)
+    d = autotune(spec, cache=cache, bucket=True, tile_rows=8)
+    x = np.zeros((16, 8), np.float32)
+    with pytest.raises(ValueError, match="unknown input"):
+        d.runner({"in_1": x, "in_1_typo": x})
+
+
+def test_bucket_spec_shape_and_fingerprint_sharing():
+    a = stencils.jacobi2d(shape=(20, 13), iterations=2)
+    b = stencils.jacobi2d(shape=(25, 10), iterations=2)
+    ba = bucket_spec(a, (32, 16))
+    bb = bucket_spec(b, (32, 16))
+    assert ba.shape == (32, 16)
+    # different declared sizes, same bucket -> identical compiled spec
+    assert structural_fingerprint(ba) == structural_fingerprint(bb)
+    assert ba == bb
+
+
+# ---------------------------------------------------------------------------
+# pad-and-mask equivalence: every variant vs the reference oracle
+# ---------------------------------------------------------------------------
+
+VARIANT_CFGS = {
+    "temporal": ParallelismConfig("temporal", k=1, s=2),
+    "spatial_r": ParallelismConfig("spatial_r", k=2, s=1),
+    "spatial_s": ParallelismConfig("spatial_s", k=2, s=1),
+    "hybrid_r": ParallelismConfig("hybrid_r", k=2, s=2),
+    "hybrid_s": ParallelismConfig("hybrid_s", k=2, s=2),
+}
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_bucket_matches_ref_all_variants(variant):
+    iters = 4
+    spec = stencils.get("jacobi2d", shape=(20, 13), iterations=iters)
+    cfg = VARIANT_CFGS[variant]
+    run = build_bucket_runner(spec, (32, 16), cfg, tile_rows=8)
+    arrays = batch_for(spec, B=2)
+    out = run(arrays)
+    assert out.shape == (2, 20, 13)
+    for b in range(2):
+        np.testing.assert_allclose(
+            out[b], oracle(spec, arrays, iters, b), rtol=2e-4, atol=2e-4,
+        )
+
+
+@pytest.mark.parametrize("name,shape,bucket", [
+    ("hotspot", (20, 13), (32, 16)),          # two inputs, one iterated
+    ("blur_jacobi2d", (20, 13), (32, 16)),    # local stage (fused loops)
+    ("heat3d", (12, 6, 5), (16, 8, 8)),       # 3-D
+])
+def test_bucket_matches_ref_hard_specs(name, shape, bucket):
+    iters = 3
+    spec = stencils.get(name, shape=shape, iterations=iters)
+    cfg = ParallelismConfig("temporal", k=1, s=3)
+    run = build_bucket_runner(spec, bucket, cfg, tile_rows=8)
+    arrays = batch_for(spec, B=2)
+    out = run(arrays)
+    assert out.shape == (2,) + shape
+    for b in range(2):
+        np.testing.assert_allclose(
+            out[b], oracle(spec, arrays, iters, b), rtol=2e-4, atol=2e-4,
+        )
+
+
+def test_bucket_bit_identical_to_unpadded_same_design():
+    """Padding + masking must not perturb a single bit: the bucket run of
+    a grid equals running the identical (masked) design unpadded."""
+    iters = 5
+    spec = stencils.get("jacobi2d", shape=(20, 13), iterations=iters)
+    cfg = ParallelismConfig("temporal", k=1, s=3)
+    arrays = batch_for(spec, B=2)
+    # bucket == grid shape: the mask is all ones, nothing is padded
+    unpadded = build_bucket_runner(spec, (20, 13), cfg, tile_rows=8)(arrays)
+    for bucket in [(32, 16), (64, 64)]:
+        padded = build_bucket_runner(spec, bucket, cfg, tile_rows=8)(arrays)
+        np.testing.assert_array_equal(padded, unpadded)
+
+
+def test_bucket_runner_pallas_backend():
+    iters = 3
+    spec = stencils.jacobi2d(shape=(20, 13), iterations=iters)
+    cfg = ParallelismConfig("temporal", k=1, s=3)
+    run = build_bucket_runner(
+        spec, (32, 16), cfg, tile_rows=8, backend="pallas", interpret=True,
+    )
+    arrays = batch_for(spec, B=2)
+    out = run(arrays)
+    for b in range(2):
+        np.testing.assert_allclose(
+            out[b], oracle(spec, arrays, iters, b), rtol=2e-4, atol=2e-4,
+        )
+
+
+def test_bucket_runner_validates_fit_and_names():
+    spec = stencils.jacobi2d(shape=(16, 8), iterations=2)
+    run = build_bucket_runner(
+        spec, (16, 8), ParallelismConfig("temporal", k=1, s=2), tile_rows=8,
+    )
+    with pytest.raises(ValueError, match="does not fit"):
+        run({"in_1": np.zeros((1, 20, 8), np.float32)})   # exceeds bucket
+    with pytest.raises(ValueError, match="unknown input"):
+        run({"in_1": np.zeros((1, 16, 8), np.float32),
+             "oops": np.zeros((1, 16, 8), np.float32)})
+    with pytest.raises(ValueError, match="missing input"):
+        run({})
+
+
+# ---------------------------------------------------------------------------
+# bucketed design cache + bucket-aware autotune
+# ---------------------------------------------------------------------------
+
+
+def test_bucketed_designs_shared_across_registrations():
+    cache = DesignCache()
+    a = stencils.jacobi2d(shape=(20, 13), iterations=2)
+    b = stencils.jacobi2d(shape=(25, 10), iterations=2)   # same bucket
+    e1 = cache.bucketed(a, tile_rows=8).runner_for((20, 13))
+    misses = cache.misses
+    e2 = cache.bucketed(b, tile_rows=8).runner_for((25, 10))
+    assert e1.bucket == e2.bucket == (32, 16)
+    assert e2.stats.cache_hit                 # no re-rank, no re-jit
+    assert cache.misses == misses
+    assert e2.cached.runner is e1.cached.runner
+
+
+def test_bucketed_design_per_bucket_counters():
+    cache = DesignCache()
+    spec = stencils.jacobi2d(shape=(20, 13), iterations=2)
+    bd = cache.bucketed(spec, tile_rows=8)
+    bd.runner_for((20, 13), count=3)
+    bd.runner_for((18, 9), count=2)           # same bucket: a hit
+    bd.runner_for((40, 40), count=1)          # new bucket: a miss
+    st = bd.stats()
+    assert bd.num_buckets == 2
+    assert st[(32, 16)]["misses"] == 1 and st[(32, 16)]["hits"] == 1
+    assert st[(32, 16)]["requests"] == 5
+    assert st[(64, 64)]["misses"] == 1 and st[(64, 64)]["requests"] == 1
+
+
+def test_autotune_bucket_path_matches_ref_and_shares_designs():
+    cache = DesignCache()
+    iters = 3
+    a = stencils.jacobi2d(shape=(20, 13), iterations=iters)
+    d1 = autotune(a, cache=cache, bucket=True, tile_rows=8)
+    x = RNG.standard_normal((20, 13)).astype(np.float32)
+    got = d1.runner({"in_1": x})
+    want = np.asarray(
+        ref.stencil_iterations_ref(a, {"in_1": jnp.asarray(x)}, iters)
+    )
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+    # a second spec in the same bucket is a pure cache hit
+    misses = cache.misses
+    b = stencils.jacobi2d(shape=(28, 12), iterations=iters)
+    d2 = autotune(b, cache=cache, bucket=True, tile_rows=8)
+    assert cache.misses == misses
+    y = RNG.standard_normal((28, 12)).astype(np.float32)
+    got2 = d2.runner({"in_1": y})
+    want2 = np.asarray(
+        ref.stencil_iterations_ref(b, {"in_1": jnp.asarray(y)}, iters)
+    )
+    np.testing.assert_allclose(got2, want2, rtol=2e-4, atol=2e-4)
+
+
+def test_autotune_bucket_requires_cache():
+    spec = stencils.jacobi2d(shape=(16, 8), iterations=2)
+    with pytest.raises(ValueError, match="requires cache"):
+        autotune(spec, bucket=True)

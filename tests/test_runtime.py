@@ -8,10 +8,11 @@ import pytest
 import jax.numpy as jnp
 
 from repro.configs import stencils
-from repro.core import autotune
+from repro.core import autotune, soda_baseline
 from repro.core.model import ParallelismConfig
 from repro.kernels import ref
 from repro.runtime import (
+    DegradedDesignWarning,
     DesignCache,
     build_batched_runner,
     devices_needed,
@@ -97,6 +98,172 @@ def test_devices_needed():
     assert devices_needed(ParallelismConfig("temporal", k=1, s=4)) == 4
     assert devices_needed(ParallelismConfig("spatial_s", k=8, s=1)) == 8
     assert devices_needed(ParallelismConfig("hybrid_s", k=2, s=3)) == 2
+
+
+# ---------------------------------------------------------------------------
+# degraded designs (device pool smaller than the config claims)
+# ---------------------------------------------------------------------------
+
+
+def test_degraded_design_warns_and_is_flagged():
+    """hybrid_r(k=8) on a 1-device host must not *silently* degrade."""
+    spec = stencils.jacobi2d(shape=(64, 8), iterations=2)
+    cfg = ParallelismConfig("hybrid_r", k=8, s=2)
+    with pytest.warns(DegradedDesignWarning, match="needs 8 device"):
+        run = build_batched_runner(spec, cfg, tile_rows=8)
+    assert run.degraded
+    assert run.cfg.k == 8                 # the config still claims k=8 ...
+    assert run.n_devices == 1             # ... but execution is single-PE
+    assert run.devices_requested == 8
+    arrays = batch_for(spec, B=2)
+    out = run(arrays)                     # degraded, but still correct
+    np.testing.assert_allclose(
+        out[0], per_grid_oracle(spec, arrays, 2, 0), rtol=2e-4, atol=2e-4,
+    )
+
+
+def test_degraded_design_raises_under_strict():
+    spec = stencils.jacobi2d(shape=(64, 8), iterations=2)
+    cfg = ParallelismConfig("spatial_s", k=4, s=1)
+    with pytest.raises(ValueError, match="needs 4 device"):
+        build_batched_runner(spec, cfg, strict=True)
+
+
+def test_strict_and_lax_callers_share_cache_entries():
+    """strict only matters for degraded configs: on a feasible config a
+    strict lookup must hit the entry a non-strict caller built."""
+    cache = DesignCache()
+    spec = stencils.jacobi2d(shape=(16, 8), iterations=2)
+    cfg = ParallelismConfig("temporal", k=1, s=2)
+    first = cache.runner(spec, cfg, tile_rows=8)
+    misses = cache.misses
+    again = cache.runner(spec, cfg, tile_rows=8, strict=True)
+    assert again is first and cache.misses == misses
+    # ... while a degraded config still refuses under strict, pre-cache
+    bad = ParallelismConfig("hybrid_s", k=2, s=2)
+    with pytest.raises(ValueError, match="needs 2 device"):
+        cache.runner(spec, bad, tile_rows=8, strict=True)
+
+
+def test_temporal_on_one_device_is_not_degraded():
+    """The sanctioned degenerate case: a temporal cascade on one chip runs
+    as fused rounds with the fusion depth (and the model's single-chip
+    prediction) preserved — no warning, no degraded flag."""
+    import warnings as _warnings
+
+    spec = stencils.jacobi2d(shape=(16, 8), iterations=4)
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error", DegradedDesignWarning)
+        run = build_batched_runner(
+            spec, ParallelismConfig("temporal", k=1, s=4), tile_rows=8
+        )
+    assert not run.degraded
+
+
+def test_batched_runner_rejects_unknown_inputs():
+    """A typo'd array name must fail loudly, not serve garbage-by-omission."""
+    spec = stencils.jacobi2d(shape=(16, 8), iterations=2)
+    run = build_batched_runner(spec, ParallelismConfig("temporal", k=1, s=2))
+    good = np.zeros((2, 16, 8), np.float32)
+    with pytest.raises(ValueError, match="unknown input"):
+        run({"in_1": good, "in_2": good})
+
+
+def test_pool_change_rebuilds_degraded_runner(monkeypatch):
+    """A runner cached while degraded (pool < config) must not be reused
+    when the device pool grows: the actual device count is in the key."""
+    import repro.runtime.cache as cache_mod
+
+    cache = DesignCache()
+    spec = stencils.jacobi2d(shape=(64, 8), iterations=2)
+    cfg = ParallelismConfig("hybrid_s", k=2, s=2)
+    with pytest.warns(DegradedDesignWarning):
+        first = cache.runner(spec, cfg, tile_rows=8)   # degraded: 1 device
+    assert first.degraded
+
+    built = []
+
+    def fake_build(spec_, cfg_, **kw):
+        built.append(kw)
+        return object()      # stand-in runner; never executed
+
+    monkeypatch.setattr(cache_mod, "build_batched_runner", fake_build)
+    # same pool: pure hit, no rebuild even through the fake builder
+    again = cache.runner(spec, cfg, tile_rows=8)
+    assert again is first and not built
+    # pool grows to 2 devices: the degraded entry must NOT be served
+    monkeypatch.setattr(
+        cache_mod.jax, "devices", lambda: [object(), object()]
+    )
+    rebuilt = cache.runner(spec, cfg, tile_rows=8)
+    assert len(built) == 1
+    assert rebuilt is not first
+
+
+# ---------------------------------------------------------------------------
+# soda_baseline fallback behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_soda_baseline_empty_candidates_raises(monkeypatch):
+    import sys
+
+    at = sys.modules["repro.core.autotune"]
+    monkeypatch.setattr(at.model, "choose_best", lambda *a, **k: [])
+    spec = stencils.jacobi2d(shape=(16, 8), iterations=2)
+    with pytest.raises(RuntimeError, match="no temporal candidate"):
+        soda_baseline(spec)
+
+
+def test_soda_baseline_retries_infeasible_configs(monkeypatch):
+    """An infeasible top temporal config must fall back to the next
+    candidate, mirroring autotune()'s retry loop."""
+    import sys
+
+    at = sys.modules["repro.core.autotune"]
+    spec = stencils.jacobi2d(shape=(20, 10), iterations=4)
+    real = at.build_runner
+    calls = {"n": 0}
+
+    def flaky(spec_, cfg, **kw):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise ValueError("synthetic infeasible temporal config")
+        return real(spec_, cfg, **kw)
+
+    monkeypatch.setattr(at, "build_runner", flaky)
+    design = soda_baseline(spec, tile_rows=8)
+    assert calls["n"] == 2                 # first failed, second built
+    assert design.config.variant == "temporal"
+    assert design.config == design.ranking[1].config
+    x = RNG.standard_normal((20, 10)).astype(np.float32)
+    want = np.asarray(
+        ref.stencil_iterations_ref(spec, {"in_1": jnp.asarray(x)}, 4)
+    )
+    np.testing.assert_allclose(
+        design.runner({"in_1": x}), want, rtol=2e-4, atol=2e-4
+    )
+
+
+def test_soda_baseline_all_infeasible_raises(monkeypatch):
+    import sys
+
+    at = sys.modules["repro.core.autotune"]
+
+    def broken(*a, **k):
+        raise ValueError("synthetic: nothing fits")
+
+    monkeypatch.setattr(at, "build_runner", broken)
+    spec = stencils.jacobi2d(shape=(16, 8), iterations=2)
+    with pytest.raises(RuntimeError, match="no feasible temporal"):
+        soda_baseline(spec)
+
+
+def test_soda_baseline_build_false_skips_executor():
+    spec = stencils.jacobi2d(shape=(16, 8), iterations=2)
+    design = soda_baseline(spec, build=False)
+    assert design.runner is None
+    assert design.config.variant == "temporal"
 
 
 # ---------------------------------------------------------------------------

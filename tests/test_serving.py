@@ -4,7 +4,7 @@ import jax.numpy as jnp
 
 from repro.configs import stencils
 from repro.kernels import ref
-from repro.runtime import DesignCache
+from repro.runtime import DesignCache, ShapeBucketer
 from repro.serve import StencilRequest, StencilServer
 
 RNG = np.random.default_rng(11)
@@ -176,6 +176,184 @@ def test_bystander_results_survive_another_clients_failed_serve():
     out = srv.completed.pop(bystander)             # A's result was retained
     np.testing.assert_allclose(
         out, oracle(jac, bystander_req, 2), rtol=2e-4, atol=2e-4)
+
+
+def test_sync_dispatch_mode_matches_oracle():
+    """async_dispatch=False must produce the same (correct) results."""
+    iters = 2
+    spec = stencils.jacobi2d(shape=(16, 8), iterations=iters)
+    srv = StencilServer(max_batch=2, cache=DesignCache(), async_dispatch=False)
+    srv.register("jac", spec)
+    reqs = [grid_request("jac", spec) for _ in range(3)]
+    outs = srv.serve(reqs)
+    for req, out in zip(reqs, outs):
+        np.testing.assert_allclose(
+            out, oracle(spec, req, iters), rtol=2e-4, atol=2e-4
+        )
+    assert srv.stats()["jac"]["batches"] == 2
+
+
+# ---------------------------------------------------------------------------
+# bucketed (multi-geometry) serving
+# ---------------------------------------------------------------------------
+
+
+def mixed_request(design, shape, rng=RNG):
+    return StencilRequest(design, {
+        "in_1": rng.standard_normal(shape).astype(np.float32)
+    })
+
+
+def test_bucketed_server_serves_mixed_shapes():
+    iters = 3
+    spec = stencils.jacobi2d(shape=(24, 16), iterations=iters)
+    srv = StencilServer(
+        max_batch=4, cache=DesignCache(), bucketing=True, tile_rows=8,
+    )
+    srv.register("jac", spec)
+    shapes = [(24, 16), (20, 12), (17, 9), (30, 28), (10, 30), (31, 31),
+              (24, 16), (18, 10)]
+    reqs = [mixed_request("jac", s) for s in shapes]
+    outs = srv.serve(reqs)
+    for req, out, shape in zip(reqs, outs, shapes):
+        assert out.shape == shape
+        np.testing.assert_allclose(
+            out, oracle(spec, req, iters), rtol=2e-4, atol=2e-4
+        )
+    st = srv.stats()["jac"]
+    assert st["requests"] == len(shapes)
+    # 8 distinct-shape requests served from a handful of bucket designs
+    assert st["compiled_buckets"] <= 4
+    assert sum(b["requests"] for b in st["buckets"].values()) == len(shapes)
+
+
+def test_bucketed_grids_share_a_micro_batch():
+    """Different shapes in the same bucket ride one dispatch, each with
+    its own exterior-zero mask."""
+    iters = 2
+    spec = stencils.jacobi2d(shape=(16, 12), iterations=iters)
+    srv = StencilServer(
+        max_batch=4, cache=DesignCache(), bucketing=True, tile_rows=8,
+    )
+    srv.register("jac", spec)
+    reqs = [mixed_request("jac", s) for s in [(16, 12), (13, 9), (9, 16)]]
+    outs = srv.serve(reqs)                  # all bucket to (16, 16)
+    st = srv.stats()["jac"]
+    assert st["batches"] == 1 and st["compiled_buckets"] == 1
+    assert st["padded_grids"] == 1          # 3 grids padded up to max_batch 4
+    for req, out in zip(reqs, outs):
+        np.testing.assert_allclose(
+            out, oracle(spec, req, iters), rtol=2e-4, atol=2e-4
+        )
+
+
+def test_bucketed_async_matches_sync_bitwise():
+    """Async double-buffered dispatch must be a pure scheduling change."""
+    iters = 3
+    spec = stencils.jacobi2d(shape=(24, 16), iterations=iters)
+    cache = DesignCache()
+    shapes = [(24, 16), (20, 12), (17, 9), (30, 28), (10, 30), (24, 16)]
+    rng_a = np.random.default_rng(99)
+    rng_b = np.random.default_rng(99)
+    srv_async = StencilServer(
+        max_batch=2, cache=cache, bucketing=True, tile_rows=8,
+        async_dispatch=True, max_inflight=2,
+    )
+    srv_sync = StencilServer(
+        max_batch=2, cache=cache, bucketing=True, tile_rows=8,
+        async_dispatch=False,
+    )
+    srv_async.register("jac", spec)
+    srv_sync.register("jac", spec)
+    outs_a = srv_async.serve([mixed_request("jac", s, rng_a) for s in shapes])
+    outs_s = srv_sync.serve([mixed_request("jac", s, rng_b) for s in shapes])
+    for a, b in zip(outs_a, outs_s):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_concurrent_submits_all_resolve():
+    """submit() is thread-safe: tickets from racing threads stay unique
+    and every request resolves to its own oracle result."""
+    import threading
+
+    iters = 2
+    spec = stencils.jacobi2d(shape=(16, 12), iterations=iters)
+    srv = StencilServer(
+        max_batch=4, cache=DesignCache(), bucketing=True, tile_rows=8,
+    )
+    srv.register("jac", spec)
+    shapes = [(16, 12), (13, 9), (9, 16), (16, 16), (8, 8), (12, 10)]
+    per_thread = 4
+    results: dict[int, tuple] = {}
+    lock = threading.Lock()
+
+    def client(tid):
+        rng = np.random.default_rng(1000 + tid)
+        for i in range(per_thread):
+            req = mixed_request("jac", shapes[(tid + i) % len(shapes)], rng)
+            ticket = srv.submit(req)
+            with lock:
+                results[ticket] = req
+
+    threads = [threading.Thread(target=client, args=(t,)) for t in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(results) == 4 * per_thread    # no ticket collisions
+    done = srv.flush()
+    assert sorted(done) == sorted(results)
+    for ticket, req in results.items():
+        np.testing.assert_allclose(
+            done[ticket], oracle(spec, req, iters), rtol=2e-4, atol=2e-4
+        )
+
+
+def test_bucketed_submit_validation():
+    import pytest
+
+    spec = stencils.jacobi2d(shape=(16, 12), iterations=2)
+    srv = StencilServer(
+        max_batch=2, cache=DesignCache(), tile_rows=8,
+        bucketing=ShapeBucketer(max_shape=(32, 32)),
+    )
+    srv.register("jac", spec)
+    with pytest.raises(ValueError, match="unknown input"):
+        srv.submit(StencilRequest(
+            "jac", {"in_1": np.zeros((8, 8), np.float32),
+                    "in_2": np.zeros((8, 8), np.float32)}))
+    with pytest.raises(ValueError, match="2-D grid"):
+        srv.submit(StencilRequest(
+            "jac", {"in_1": np.zeros((8, 8, 3), np.float32)}))
+    with pytest.raises(ValueError, match="not bucketable"):
+        srv.submit(StencilRequest(
+            "jac", {"in_1": np.zeros((64, 8), np.float32)}))
+    assert srv.flush() == {}                # nothing malformed was queued
+    # a fitting request still works
+    out = srv.serve([mixed_request("jac", (10, 10))])
+    assert out[0].shape == (10, 10)
+
+
+def test_bucketed_register_idempotent_across_shapes():
+    """Bucketed registrations are shape-agnostic: re-registering the same
+    structure with a different declared grid size is idempotent."""
+    import pytest
+
+    a = stencils.jacobi2d(shape=(16, 12), iterations=2)
+    b = stencils.jacobi2d(shape=(24, 10), iterations=2)   # same structure
+    hot = stencils.hotspot(shape=(16, 12), iterations=2)
+    srv = StencilServer(
+        max_batch=2, cache=DesignCache(), bucketing=True, tile_rows=8,
+    )
+    r1 = srv.register("jac", a)
+    assert srv.register("jac", b) is r1
+    with pytest.raises(ValueError, match="already registered"):
+        srv.register("jac", hot)
+    with pytest.raises(ValueError, match="already registered"):
+        srv.register("jac", a, bucketing=False)   # mode mismatch
+    with pytest.raises(ValueError, match="already registered"):
+        # same mode, different ladder policy: must not be silently ignored
+        srv.register("jac", a, bucketing=ShapeBucketer(max_shape=(64, 64)))
 
 
 def test_tickets_resolve_in_submission_order():
