@@ -39,7 +39,6 @@ def _features(spec, iters, s):
     from repro.core.model import _op_mix
     cells = float(np.prod(spec.shape))
     mix = _op_mix(spec)
-    rounds = float(-(-iters // s))
     bytes_ = (cells * spec.itemsize
               * (spec.num_inputs + 1 + 2 * len(spec.stages)) * iters)
     return np.array([

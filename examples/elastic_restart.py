@@ -4,7 +4,6 @@ the surviving slice had a different topology.
 
     PYTHONPATH=src python examples/elastic_restart.py
 """
-import dataclasses
 import shutil
 import tempfile
 

@@ -20,7 +20,6 @@ stages micro-batch N+1 while the device executes micro-batch N.
 """
 import numpy as np
 
-from repro.core.dsl import parse
 from repro.runtime import DesignCache
 from repro.serve import StencilRequest, StencilServer
 

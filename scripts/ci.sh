@@ -14,6 +14,16 @@ if [[ "${1:-}" == "fast" ]]; then
   MARK=(-m "not slow")
 fi
 
+echo "== lint: pyflakes =="
+# CI installs pyflakes (see .github/workflows/ci.yml); hosts without it
+# fall back to a byte-compile pass so the gate never silently vanishes.
+if python -c "import pyflakes" >/dev/null 2>&1; then
+  python -m pyflakes src tests benchmarks examples scripts
+else
+  echo "pyflakes not installed; falling back to compileall"
+  python -m compileall -q src tests benchmarks examples scripts
+fi
+
 echo "== tier-1: pytest =="
 python -m pytest -x -q "${MARK[@]}"
 

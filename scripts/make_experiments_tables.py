@@ -2,7 +2,6 @@
 JSONs (baseline: dryrun_results.json; hillclimb: hillclimb_results.json).
 """
 import json
-import sys
 
 
 def fmt_bytes(b):

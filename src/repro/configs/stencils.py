@@ -1,7 +1,10 @@
 """The paper's stencil benchmark suite, written in the SASA DSL (Section 5.1).
 
 Eight kernels: JACOBI2D, JACOBI3D, BLUR, SEIDEL2D, DILATE, HOTSPOT, HEAT3D,
-SOBEL2D — plus the two-loop BLUR-JACOBI2D fusion example from Listing 4.
+SOBEL2D — plus the two-loop BLUR-JACOBI2D fusion example from Listing 4,
+and three non-zero-boundary variants exercising the boundary-condition
+machinery end to end (docs/DESIGN.md §Boundary semantics): a periodic
+(torus) HEAT3D and replicate-edge BLUR/SOBEL image filters.
 
 Input sizes follow the paper: 2D ∈ {256x256, 720x1024, 9720x1024, 4096x4096},
 3D ∈ {256x16x16, 720x32x32, 9720x32x32, 4096x64x64}.  Iterations sweep
@@ -142,6 +145,57 @@ output float: out(0,0) = (temp(0,1) + temp(1,0) + temp(0,0) + temp(0,-1) + temp(
 """)
 
 
+def heat3d_periodic(shape=(9720, 32, 32), iterations=4) -> StencilSpec:
+    """7-point 3D heat diffusion on a torus (periodic boundary).
+
+    The molecular-dynamics / spectral-solver setting: heat leaving one
+    face re-enters the opposite one.  Exercises the wraparound ppermute
+    halo exchange in the distribution layer and the wrap-filled host
+    padding in the Pallas kernel.
+    """
+    return dsl.parse(f"""
+kernel: HEAT3D-PERIODIC
+iteration: {iterations}
+boundary: periodic
+input float: in_1({_fmt_shape(shape)})
+output float: out_1(0,0,0) = 0.125 * (in_1(1,0,0) - 2 * in_1(0,0,0) + in_1(-1,0,0))
+    + 0.125 * (in_1(0,1,0) - 2 * in_1(0,0,0) + in_1(0,-1,0))
+    + 0.125 * (in_1(0,0,1) - 2 * in_1(0,0,0) + in_1(0,0,-1))
+    + in_1(0,0,0)
+""")
+
+
+def blur_replicate(shape=(9720, 1024), iterations=4) -> StencilSpec:
+    """9-point box blur with clamped (replicate) edges.
+
+    The image-processing convention: edge pixels average a clamped
+    neighbourhood instead of darkening toward the zero exterior.
+    """
+    return dsl.parse(f"""
+kernel: BLUR-REPLICATE
+iteration: {iterations}
+boundary: replicate
+input float: in_1({_fmt_shape(shape)})
+output float: out_1(0,0) = (in_1(-1,-1) + in_1(-1,0) + in_1(-1,1)
+    + in_1(0,-1) + in_1(0,0) + in_1(0,1)
+    + in_1(1,-1) + in_1(1,0) + in_1(1,1)) / 9
+""")
+
+
+def sobel2d_replicate(shape=(9720, 1024), iterations=4) -> StencilSpec:
+    """Sobel edge filter with clamped edges (no spurious border edges)."""
+    return dsl.parse(f"""
+kernel: SOBEL2D-REPLICATE
+iteration: {iterations}
+boundary: replicate
+input float: in_1({_fmt_shape(shape)})
+output float: out_1(0,0) = abs(in_1(-1,-1) + 2 * in_1(0,-1) + in_1(1,-1)
+        - in_1(-1,1) - 2 * in_1(0,1) - in_1(1,1))
+    + abs(in_1(-1,-1) + 2 * in_1(-1,0) + in_1(-1,1)
+        - in_1(1,-1) - 2 * in_1(1,0) - in_1(1,1))
+""")
+
+
 BENCHMARKS = {
     "jacobi2d": jacobi2d,
     "jacobi3d": jacobi3d,
@@ -152,13 +206,16 @@ BENCHMARKS = {
     "heat3d": heat3d,
     "sobel2d": sobel2d,
     "blur_jacobi2d": blur_jacobi2d,
+    "heat3d_periodic": heat3d_periodic,
+    "blur_replicate": blur_replicate,
+    "sobel2d_replicate": sobel2d_replicate,
 }
 
 BENCHMARKS_2D = [
     "jacobi2d", "blur", "seidel2d", "dilate", "hotspot", "sobel2d",
-    "blur_jacobi2d",
+    "blur_jacobi2d", "blur_replicate", "sobel2d_replicate",
 ]
-BENCHMARKS_3D = ["jacobi3d", "heat3d"]
+BENCHMARKS_3D = ["jacobi3d", "heat3d", "heat3d_periodic"]
 
 
 def get(name: str, shape=None, iterations: int = 4) -> StencilSpec:

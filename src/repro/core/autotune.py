@@ -1,28 +1,33 @@
 """SASA end-to-end automation flow (paper Sec. 4.3), TPU edition.
 
-  DSL text ──parse──► StencilSpec ──analytical model──► ranked configs
+  DSL text ──parse──► StencilSpec ──IR lowering──► optimized spec
+      ──analytical model──► ranked configs
       ──executor build──► jitted shard_map/Pallas runner (+ host driver)
 
-Mirrors the paper's five steps:
-  1. parse DSL, generate the single-PE (single-chip fused kernel) design;
+Mirrors the paper's five steps, with the IR pass pipeline
+(:mod:`repro.core.ir`, docs/DESIGN.md §IR pass pipeline) inserted between
+the front end and everything else:
+  1. parse DSL; lower through constant folding / algebraic simplification
+     / CSE, so every later step sees post-optimization op counts;
   2. estimate the resource bound — on TPU this is the VMEM fusion limit
      (Eq. 1's analogue) and the chip count (Eq. 2's analogue);
   3. rank parallelism configs with the analytical model (Eqs. 4-9);
   4. emit the multi-PE program: a jit(shard_map(...)) with ppermute border
-     streaming / redundant-halo trapezoids and fused Pallas iteration tiles;
-  5. if a config is infeasible on the actual device pool (e.g. halo
-     constraint), fall back to the next-best candidate — the paper's
-     "build next best design" retry loop.
+     streaming / redundant-halo trapezoids and fused Pallas iteration
+     tiles — compiled from the *optimized* expression trees;
+  5. if a config is infeasible on the actual device pool (e.g. halo or
+     boundary constraint), fall back to the next-best candidate — the
+     paper's "build next best design" retry loop.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping
 
 import jax
 
 from repro.core import dsl, model
 from repro.core.distribute import build_runner
+from repro.core.ir import PassReport, lower
 from repro.core.model import ParallelismConfig, Prediction
 from repro.core.platform import DEFAULT_TPU, TPUPlatform
 from repro.core.spec import StencilSpec
@@ -30,10 +35,11 @@ from repro.core.spec import StencilSpec
 
 @dataclasses.dataclass
 class TunedDesign:
-    spec: StencilSpec
+    spec: StencilSpec   # the lowered (IR-optimized) spec executors run
     prediction: Prediction
     ranking: list[Prediction]
     runner: object  # callable(arrays) -> np.ndarray
+    lowering: tuple[PassReport, ...] = ()  # per-pass op-delta report
 
     @property
     def config(self) -> ParallelismConfig:
@@ -117,13 +123,17 @@ def autotune(
         if isinstance(source_or_spec, StencilSpec)
         else dsl.parse(source_or_spec)
     )
+    lowered = lower(spec)
+    spec = lowered.spec  # ranking AND executors consume the optimized trees
     if platform is None:
         n_avail = len(devices) if devices is not None else len(jax.devices())
         platform = DEFAULT_TPU.with_chips(n_avail)
     elif build:
         n_avail = len(devices) if devices is not None else len(jax.devices())
         platform = platform.with_chips(min(platform.num_chips, n_avail))
-    ranking = model.choose_best(spec, platform, iterations=iterations)
+    ranking = model.choose_best(
+        spec, platform, iterations=iterations, optimize=False
+    )
     last_err = None
     for pred in ranking:
         runner = None
@@ -136,7 +146,7 @@ def autotune(
             except ValueError as e:  # infeasible on the actual pool: retry
                 last_err = e
                 continue
-        return TunedDesign(spec, pred, ranking, runner)
+        return TunedDesign(spec, pred, ranking, runner, lowered.reports)
     raise RuntimeError(f"no feasible configuration: {last_err}")
 
 
@@ -158,11 +168,15 @@ def soda_baseline(
         if isinstance(source_or_spec, StencilSpec)
         else dsl.parse(source_or_spec)
     )
+    lowered = lower(spec)
+    spec = lowered.spec
     if platform is None:
         n_avail = len(devices) if devices is not None else len(jax.devices())
         platform = DEFAULT_TPU.with_chips(n_avail)
     cands = [
-        p for p in model.choose_best(spec, platform, iterations=iterations)
+        p for p in model.choose_best(
+            spec, platform, iterations=iterations, optimize=False
+        )
         if p.config.variant == "temporal"
     ]
     if not cands:
@@ -172,7 +186,7 @@ def soda_baseline(
             "axis"
         )
     if not build:
-        return TunedDesign(spec, cands[0], cands, None)
+        return TunedDesign(spec, cands[0], cands, None, lowered.reports)
     # same "build next best design" retry loop as autotune(): an
     # infeasible temporal config falls back to the next candidate
     last_err = None
@@ -185,5 +199,5 @@ def soda_baseline(
         except ValueError as e:
             last_err = e
             continue
-        return TunedDesign(spec, pred, cands, runner)
+        return TunedDesign(spec, pred, cands, runner, lowered.reports)
     raise RuntimeError(f"no feasible temporal configuration: {last_err}")

@@ -1,7 +1,7 @@
 """Multi-device stencil execution: the five SASA parallelisms on a TPU mesh.
 
 FPGA -> TPU mapping (Sec. 3 of the paper re-derived for ICI-connected
-chips; DESIGN.md carries the full narrative):
+chips; docs/DESIGN.md §FPGA-to-TPU mapping carries the full narrative):
 
   temporal    cascaded PEs, tiles streamed PE->PE     cross-device software
               through FIFOs, one HBM bank touched     pipeline: row tiles flow
@@ -22,12 +22,18 @@ Every runner is a jit(shard_map(...)) program over a 1-D ("sp",) device
 mesh, numerically equivalent to :func:`repro.kernels.ref.stencil_iterations_ref`
 (tests enforce this on 8 forced host devices).
 
-ppermute conveniently zero-fills non-participating edge devices, which is
-exactly the exterior-zero boundary the reference semantics prescribe.
+Boundary semantics (docs/DESIGN.md §Boundary semantics): for the default
+``zero`` boundary ppermute conveniently zero-fills non-participating edge
+devices, exactly the exterior-zero rule.  ``periodic`` boundaries map
+onto a *wraparound* ppermute ring — device 0's upper halo arrives from
+device k-1 — which is the ICI analogue of the paper's border-streaming
+wires closed into a torus.  ``constant``/``replicate`` are re-imposed by
+the shared per-stage boundary fixup inside each local trapezoid; the
+non-row dimensions, resident in full on every device, carry an explicit
+boundary belt the fixup refreshes.
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Mapping
 
@@ -40,7 +46,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.compat import axis_size, pvary, shard_map
 from repro.core.model import ParallelismConfig
 from repro.core.spec import StencilSpec
-from repro.kernels.blockops import fused_iterations_on_block
+from repro.kernels.blockops import boundary_pad, fused_iterations_on_block
 
 AXIS = "sp"
 
@@ -50,25 +56,36 @@ AXIS = "sp"
 # --------------------------------------------------------------------------
 
 
-def exchange_halo(local: jnp.ndarray, h: int, axis: str = AXIS):
+def exchange_halo(local: jnp.ndarray, h: int, axis: str = AXIS,
+                  wrap: bool = False):
     """Return (up_halo, down_halo): h rows from the previous / next device.
 
-    Edge devices receive zeros (exterior-zero boundary for the global grid;
-    padded-row shards are additionally handled by the grid mask).
+    With ``wrap=False`` edge devices receive zeros (exterior-zero boundary
+    for the global grid; padded-row shards are additionally handled by the
+    boundary fixup).  With ``wrap=True`` the permutation closes into a
+    ring — device 0 receives device k-1's bottom rows and vice versa — the
+    wraparound halo exchange periodic boundaries need; on a single device
+    the ring degenerates to the shard's own opposite edge.
     """
     k = axis_size(axis)
-    if k == 1 or h == 0:
+    if h == 0 or (k == 1 and not wrap):
         zeros = jnp.zeros((h,) + local.shape[1:], local.dtype)
         return zeros, zeros
-    down_perm = [(i, i + 1) for i in range(k - 1)]   # my bottom rows -> next
-    up_perm = [(i, i - 1) for i in range(1, k)]      # my top rows -> previous
+    if k == 1:
+        return local[-h:], local[:h]
+    if wrap:
+        down_perm = [(i, (i + 1) % k) for i in range(k)]
+        up_perm = [(i, (i - 1) % k) for i in range(k)]
+    else:
+        down_perm = [(i, i + 1) for i in range(k - 1)]  # my bottom rows -> next
+        up_perm = [(i, i - 1) for i in range(1, k)]     # my top rows -> previous
     up_halo = lax.ppermute(local[-h:], axis, down_perm)   # from device i-1
     down_halo = lax.ppermute(local[:h], axis, up_perm)    # from device i+1
     return up_halo, down_halo
 
 
-def _extend(local, h, axis=AXIS):
-    up, down = exchange_halo(local, h, axis)
+def _extend(local, h, axis=AXIS, wrap=False):
+    up, down = exchange_halo(local, h, axis, wrap)
     return jnp.concatenate([up, local, down], axis=0)
 
 
@@ -81,23 +98,22 @@ def _local_rows(R_pad: int, k: int) -> int:
     return R_pad // k
 
 
-def _spatial_s_local(spec, iterations, grid_shape, R_k):
+def _spatial_s_local(spec, iterations, grid_shape, R_k, col_pads, wrap):
     r = spec.radius
-    col0 = (0,) * (spec.ndim - 1)
 
     def fn(arrays: dict):
         idx = lax.axis_index(AXIS)
         row0 = idx * R_k - r
         consts = {
-            n: _extend(a, r) for n, a in arrays.items()
+            n: _extend(a, r, wrap=wrap) for n, a in arrays.items()
             if n != spec.iterate_input
         }
         cur = arrays[spec.iterate_input]
         for _ in range(iterations):
             ext = dict(consts)
-            ext[spec.iterate_input] = _extend(cur, r)
+            ext[spec.iterate_input] = _extend(cur, r, wrap=wrap)
             out = fused_iterations_on_block(
-                spec, ext, 1, row0, grid_shape, col0
+                spec, ext, 1, row0, grid_shape, col_pads
             )
             cur = out[r:r + R_k]
         return cur
@@ -105,32 +121,32 @@ def _spatial_s_local(spec, iterations, grid_shape, R_k):
     return fn
 
 
-def _spatial_r_local(spec, iterations, grid_shape, R_k):
+def _spatial_r_local(spec, iterations, grid_shape, R_k, col_pads, wrap):
     r = spec.radius
     H = min(iterations * r, R_k)
-    col0 = (0,) * (spec.ndim - 1)
 
     def fn(arrays: dict):
         idx = lax.axis_index(AXIS)
         row0 = idx * R_k - H
-        ext = {n: _extend(a, H) for n, a in arrays.items()}
+        ext = {n: _extend(a, H, wrap=wrap) for n, a in arrays.items()}
         cur = ext[spec.iterate_input]
         # one HBM round trip per iteration (faithful Spatial_R: the fused
         # trapezoid depth is 1; the halo just shrinks by r per iteration)
         for _ in range(iterations):
             ext[spec.iterate_input] = cur
-            cur = fused_iterations_on_block(spec, ext, 1, row0, grid_shape, col0)
+            cur = fused_iterations_on_block(
+                spec, ext, 1, row0, grid_shape, col_pads
+            )
         return cur[H:H + R_k]
 
     return fn
 
 
-def _hybrid_local(spec, iterations, grid_shape, R_k, s, streaming: bool):
+def _hybrid_local(spec, iterations, grid_shape, R_k, s, streaming: bool,
+                  col_pads, wrap):
     """hybrid_s (streaming=True): exchange s*r rows per round.
     hybrid_r (streaming=False): exchange iter*r rows once, then rounds."""
     r = spec.radius
-    col0 = (0,) * (spec.ndim - 1)
-    rounds = math.ceil(iterations / s)
 
     def fn(arrays: dict):
         idx = lax.axis_index(AXIS)
@@ -144,10 +160,10 @@ def _hybrid_local(spec, iterations, grid_shape, R_k, s, streaming: bool):
                 step = min(s, left)
                 h = step * r
                 row0 = idx * R_k - h
-                ext = {n: _extend(a, h) for n, a in consts.items()}
-                ext[spec.iterate_input] = _extend(cur, h)
+                ext = {n: _extend(a, h, wrap=wrap) for n, a in consts.items()}
+                ext[spec.iterate_input] = _extend(cur, h, wrap=wrap)
                 out = fused_iterations_on_block(
-                    spec, ext, step, row0, grid_shape, col0
+                    spec, ext, step, row0, grid_shape, col_pads
                 )
                 cur = out[h:h + R_k]
                 left -= step
@@ -155,14 +171,14 @@ def _hybrid_local(spec, iterations, grid_shape, R_k, s, streaming: bool):
         # hybrid_r: single up-front exchange of the full run's halo
         H = min(iterations * r, R_k)
         row0 = idx * R_k - H
-        ext = {n: _extend(a, H) for n, a in arrays.items()}
+        ext = {n: _extend(a, H, wrap=wrap) for n, a in arrays.items()}
         cur = ext[spec.iterate_input]
         left = iterations
         while left > 0:
             step = min(s, left)
             ext[spec.iterate_input] = cur
             cur = fused_iterations_on_block(
-                spec, ext, step, row0, grid_shape, col0
+                spec, ext, step, row0, grid_shape, col_pads
             )
             left -= step
         return cur[H:H + R_k]
@@ -170,7 +186,8 @@ def _hybrid_local(spec, iterations, grid_shape, R_k, s, streaming: bool):
     return fn
 
 
-def _temporal_pipeline_local(spec, iterations, grid_shape, tile_rows, k):
+def _temporal_pipeline_local(spec, iterations, grid_shape, tile_rows, k,
+                             col_pads):
     """SODA-analogue temporal pipeline: row tiles stream through the device
     chain, device j applies stencil iteration j of the current round.
 
@@ -183,22 +200,29 @@ def _temporal_pipeline_local(spec, iterations, grid_shape, tile_rows, k):
     h = k * r
     R = grid_shape[0]
     T = math.ceil(R / tile_rows)
-    R_pad = T * tile_rows
-    col0 = (0,) * (spec.ndim - 1)
-    rounds = math.ceil(iterations / k)
+    boundary = spec.boundary
+
+    def _row_pad(a):
+        """Boundary halo around the real rows, then tile-alignment zeros.
+
+        The replicated array may carry host row padding past ``R``; the
+        boundary fill (wrap/edge/constant) must be laid against the real
+        grid edge, so the halo is applied to the first ``R`` rows and the
+        alignment padding re-appended outside it.
+        """
+        zeros = [(0, 0)] * (spec.ndim - 1)
+        if boundary.is_zero:
+            return jnp.pad(a, [(h, h)] + zeros)
+        padded = boundary_pad(a[:R], [(h, h)] + zeros, boundary)
+        return jnp.pad(padded, [(0, a.shape[0] - R)] + zeros)
 
     def one_round(arrays, active):
         """active: number of live stages this round (idle PEs pass through)."""
         j = lax.axis_index(AXIS)
         cur_global = arrays[spec.iterate_input]  # replicated (R_pad, C...)
         consts = {n: a for n, a in arrays.items() if n != spec.iterate_input}
-        padded = jnp.pad(
-            cur_global, [(h, h)] + [(0, 0)] * (spec.ndim - 1)
-        )
-        consts_padded = {
-            n: jnp.pad(a, [(h, h)] + [(0, 0)] * (spec.ndim - 1))
-            for n, a in consts.items()
-        }
+        padded = _row_pad(cur_global)
+        consts_padded = {n: _row_pad(a) for n, a in consts.items()}
         tile_shape = (tile_rows + 2 * h,) + tuple(cur_global.shape[1:])
         # carries become device-varying after the first ppermute; mark the
         # initial zeros as varying so the fori_loop carry types match
@@ -221,7 +245,7 @@ def _temporal_pipeline_local(spec, iterations, grid_shape, tile_rows, k):
             env = dict(const_tiles)
             env[spec.iterate_input] = buf
             applied = fused_iterations_on_block(
-                spec, env, 1, row0, grid_shape, col0
+                spec, env, 1, row0, grid_shape, col_pads
             )
             applied = jnp.where(j < active, applied, buf)  # idle stage
             # last live stage commits the tile's valid center to the output
@@ -265,6 +289,27 @@ def _temporal_pipeline_local(spec, iterations, grid_shape, tile_rows, k):
     return fn
 
 
+def _with_col_belt(local, spec: StencilSpec, boundary, p: int):
+    """Wrap a local program with a boundary belt on the non-row dims.
+
+    Columns are resident in full on every device, so the belt is filled
+    locally (edge/wrap/constant of the shard's own columns equals the
+    global rule) and sliced back off after the local trapezoid; the
+    per-stage fixup inside the trapezoid keeps it current.
+    """
+    cpads = [(0, 0)] + [(p, p)] * (spec.ndim - 1)
+
+    def fn(arrays: dict):
+        ext = {n: boundary_pad(a, cpads, boundary) for n, a in arrays.items()}
+        out = local(ext)
+        sl = (slice(None),) + tuple(
+            slice(p, p + c) for c in spec.shape[1:]
+        )
+        return out[sl]
+
+    return fn
+
+
 # --------------------------------------------------------------------------
 # Public runner builder
 # --------------------------------------------------------------------------
@@ -297,11 +342,17 @@ def build_runner(
     mesh = Mesh(np.array(devices), (AXIS,))
     R = spec.rows
     grid_shape = spec.shape
+    boundary = spec.boundary
+    wrap = boundary.kind == "periodic"
+    # non-zero boundaries carry an explicit column belt the per-stage
+    # fixup refreshes (zero keeps the seed's implicit zero-pad columns)
+    p_col = 0 if boundary.is_zero else spec.radius
+    col_pads = (p_col,) * (spec.ndim - 1)
 
     if cfg.variant == "temporal":
         R_pad = math.ceil(R / tile_rows) * tile_rows
         local = _temporal_pipeline_local(
-            spec, it, grid_shape, tile_rows, k
+            spec, it, grid_shape, tile_rows, k, col_pads
         )
         in_spec = P()   # replicated: one logical HBM bank
         out_spec = P()
@@ -314,18 +365,46 @@ def build_runner(
                 f"({it}*{spec.radius} > {R_k}); the auto-tuner excludes "
                 "such configs (halo would span multiple neighbours)"
             )
+        if wrap and R_pad != R:
+            raise ValueError(
+                f"periodic boundary needs rows divisible by the spatial "
+                f"degree ({R} rows over k={k} devices leaves "
+                f"{R_pad - R} padding rows that would break the "
+                "wraparound halo adjacency); the auto-tuner falls back to "
+                "the next candidate"
+            )
+        if boundary.kind == "replicate" and (k - 1) * R_k > R - 1:
+            raise ValueError(
+                f"replicate boundary needs every device to own at least "
+                f"one real grid row ({R} rows over k={k} devices leaves "
+                "an all-padding shard that cannot clamp to the edge); "
+                "the auto-tuner falls back to the next candidate"
+            )
         if cfg.variant == "spatial_s":
-            local = _spatial_s_local(spec, it, grid_shape, R_k)
+            local = _spatial_s_local(
+                spec, it, grid_shape, R_k, col_pads, wrap
+            )
         elif cfg.variant == "spatial_r":
-            local = _spatial_r_local(spec, it, grid_shape, R_k)
+            local = _spatial_r_local(
+                spec, it, grid_shape, R_k, col_pads, wrap
+            )
         elif cfg.variant == "hybrid_s":
-            local = _hybrid_local(spec, it, grid_shape, R_k, max(cfg.s, 1), True)
+            local = _hybrid_local(
+                spec, it, grid_shape, R_k, max(cfg.s, 1), True, col_pads,
+                wrap,
+            )
         elif cfg.variant == "hybrid_r":
-            local = _hybrid_local(spec, it, grid_shape, R_k, max(cfg.s, 1), False)
+            local = _hybrid_local(
+                spec, it, grid_shape, R_k, max(cfg.s, 1), False, col_pads,
+                wrap,
+            )
         else:
             raise ValueError(cfg.variant)
         in_spec = P(AXIS)
         out_spec = P(AXIS)
+
+    if p_col:
+        local = _with_col_belt(local, spec, boundary, p_col)
 
     names = list(spec.inputs)
     if batched:

@@ -3,8 +3,9 @@
 Grammar (line oriented, ``#`` comments allowed)::
 
     kernel: NAME
-    iteration: INT
+    iteration: INT                     # >= 1
     iterate: NAME                      # optional; default = last input
+    boundary: zero | constant FLOAT | replicate | periodic   # default zero
     input TYPE: NAME(INT, INT[, INT])
     local TYPE: NAME(off, off[, off]) = EXPR
     output TYPE: NAME(off, off[, off]) = EXPR
@@ -19,9 +20,25 @@ recursive-descent parser to stay dependency-free.
 """
 from __future__ import annotations
 
+import dataclasses
 import re
 
-from repro.core.spec import BinOp, Call, Expr, INTRINSICS, Neg, Num, Ref, Stage, StencilSpec
+from repro.core.spec import (
+    BOUNDARY_KINDS,
+    BinOp,
+    Boundary,
+    Call,
+    Expr,
+    INTRINSICS,
+    Let,
+    Neg,
+    Num,
+    Ref,
+    Stage,
+    StencilSpec,
+    Var,
+    walk,
+)
 
 _TOKEN_RE = re.compile(
     r"\s*(?:(?P<num>\d+\.\d*(?:[eE][+-]?\d+)?|\.\d+(?:[eE][+-]?\d+)?|\d+(?:[eE][+-]?\d+)?)"
@@ -123,7 +140,7 @@ class _ExprParser:
 
 
 _HEADER_RE = re.compile(
-    r"^(?P<kw>kernel|iteration|iterate)\s*:\s*(?P<val>.+)$"
+    r"^(?P<kw>kernel|iteration|iterate|boundary)\s*:\s*(?P<val>.+)$"
 )
 _DECL_RE = re.compile(
     r"^(?P<kw>input|local|output)\s+(?P<dtype>[A-Za-z_0-9]+)\s*:\s*"
@@ -143,11 +160,43 @@ _DTYPES = {
 }
 
 
+def _parse_boundary(val: str) -> Boundary:
+    parts = val.split()
+    kind = parts[0]
+    if kind not in BOUNDARY_KINDS:
+        raise SyntaxError(
+            f"unknown boundary {kind!r} (expected one of "
+            f"{', '.join(BOUNDARY_KINDS)})"
+        )
+    if kind == "constant":
+        if len(parts) != 2:
+            raise SyntaxError(
+                "'boundary: constant' needs exactly one value, e.g. "
+                "'boundary: constant 1.5'"
+            )
+        try:
+            value = float(parts[1])
+        except ValueError:
+            raise SyntaxError(
+                f"bad boundary constant {parts[1]!r} (must be a number)"
+            ) from None
+        try:
+            return Boundary("constant", value)
+        except ValueError as e:   # e.g. non-finite value
+            raise SyntaxError(str(e)) from None
+    if len(parts) != 1:
+        raise SyntaxError(
+            f"'boundary: {kind}' takes no value, got {val!r}"
+        )
+    return Boundary(kind)
+
+
 def parse(text: str) -> StencilSpec:
     """Parse SASA DSL text into a validated :class:`StencilSpec`."""
     name = None
     iterations = 1
     iterate = None
+    boundary = Boundary("zero")
     inputs: dict[str, tuple[str, tuple[int, ...]]] = {}
     stages: list[Stage] = []
 
@@ -174,7 +223,18 @@ def parse(text: str) -> StencilSpec:
             if kw == "kernel":
                 name = val
             elif kw == "iteration":
-                iterations = int(val)
+                try:
+                    iterations = int(val)
+                except ValueError:
+                    raise SyntaxError(
+                        f"bad iteration count {val!r} (must be an integer)"
+                    ) from None
+                if iterations < 1:
+                    raise SyntaxError(
+                        f"iteration count must be >= 1, got {iterations}"
+                    )
+            elif kw == "boundary":
+                boundary = _parse_boundary(val)
             else:
                 iterate = val
             continue
@@ -190,11 +250,23 @@ def parse(text: str) -> StencilSpec:
         if kw == "input":
             if m.group("expr"):
                 raise SyntaxError("input declarations cannot have an '='")
+            if arr in inputs:
+                raise SyntaxError(
+                    f"duplicate input declaration {arr!r} (a second "
+                    "declaration would silently overwrite the first)"
+                )
             shape = tuple(int(a) for a in args)
             inputs[arr] = (dtype, shape)
         else:
             if not m.group("expr"):
                 raise SyntaxError(f"{kw} declaration needs an '=' expression")
+            if arr in inputs:
+                raise SyntaxError(
+                    f"{kw} stage {arr!r} shadows the input of the same "
+                    "name; rename the stage"
+                )
+            if any(s.name == arr for s in stages):
+                raise SyntaxError(f"duplicate stage declaration {arr!r}")
             if inputs:
                 ndim = len(next(iter(inputs.values()))[1])
                 if len(args) != ndim:
@@ -227,6 +299,99 @@ def parse(text: str) -> StencilSpec:
         inputs=inputs,
         stages=tuple(stages),
         iterate_input=iterate,
+        boundary=boundary,
     )
     spec.validate()
     return spec
+
+
+# --------------------------------------------------------------------------
+# Pretty-printer (inverse of parse)
+# --------------------------------------------------------------------------
+
+_DTYPE_NAMES = {
+    "float32": "float",
+    "float64": "double",
+    "int32": "int",
+    "uint16": "uint16",
+    "bfloat16": "bfloat16",
+}
+
+_PREC = {"+": 1, "-": 1, "*": 2, "/": 2}
+
+
+def _format_num(v: float) -> str:
+    return repr(float(v))
+
+
+def _format_expr(expr: Expr, prec: int = 0) -> str:
+    if isinstance(expr, Num):
+        s = _format_num(expr.value)
+        # negative literals only exist after constant folding; print them
+        # as the unary-minus form the tokenizer understands
+        return f"({s})" if expr.value < 0 and prec > 0 else s
+    if isinstance(expr, Ref):
+        return f"{expr.name}({', '.join(str(o) for o in expr.offsets)})"
+    if isinstance(expr, Call):
+        args = ", ".join(_format_expr(a) for a in expr.args)
+        return f"{expr.fn}({args})"
+    if isinstance(expr, Neg):
+        return f"-{_format_expr(expr.arg, prec=3)}"
+    if isinstance(expr, BinOp):
+        p = _PREC[expr.op]
+        # right child parenthesized at equal precedence: the parser is
+        # left-associative, so "a - b - c" != "a - (b - c)"
+        s = (
+            f"{_format_expr(expr.lhs, p)} {expr.op} "
+            f"{_format_expr(expr.rhs, p + 1)}"
+        )
+        return f"({s})" if p < prec else s
+    raise TypeError(f"cannot format expression node {expr!r}")
+
+
+def format_spec(spec: StencilSpec) -> str:
+    """Render a spec back to parseable DSL text.
+
+    ``parse(format_spec(spec)) == spec`` for every parser-producible spec
+    (round-trip identity, tested over the whole benchmark suite and all
+    boundary modes).  Lowered specs print too — ``Let`` bindings have no
+    surface syntax, so they are inlined first; the round trip is then
+    semantic rather than structural.
+    """
+    if any(
+        isinstance(n, (Let, Var))
+        for st in spec.stages
+        for n in walk(st.expr)
+    ):
+        from repro.core.ir import inline_lets
+
+        spec = dataclasses.replace(
+            spec,
+            stages=tuple(
+                dataclasses.replace(st, expr=inline_lets(st.expr))
+                for st in spec.stages
+            ),
+        )
+    lines = [f"kernel: {spec.name}", f"iteration: {spec.iterations}"]
+    if spec.boundary.kind != "zero":
+        if spec.boundary.kind == "constant":
+            lines.append(
+                f"boundary: constant {_format_num(spec.boundary.value)}"
+            )
+        else:
+            lines.append(f"boundary: {spec.boundary.kind}")
+    lines.append(f"iterate: {spec.iterate_input}")
+    for n, (dt, shape) in spec.inputs.items():
+        dtname = _DTYPE_NAMES[str(dt)]
+        lines.append(
+            f"input {dtname}: {n}({', '.join(str(s) for s in shape)})"
+        )
+    zero_off = ", ".join("0" for _ in range(spec.ndim))
+    for st in spec.stages:
+        kw = "output" if st.is_output else "local"
+        dtname = _DTYPE_NAMES[str(st.dtype)]
+        lines.append(
+            f"{kw} {dtname}: {st.name}({zero_off}) = "
+            f"{_format_expr(st.expr)}"
+        )
+    return "\n".join(lines) + "\n"

@@ -28,9 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Iterable
-
-from repro.core.platform import CPUPlatform, FPGAPlatform, TPUPlatform
+from repro.core.platform import FPGAPlatform, TPUPlatform
 from repro.core.spec import BinOp, Call, Neg, StencilSpec, walk
 
 VARIANTS = ("temporal", "spatial_r", "spatial_s", "hybrid_r", "hybrid_s")
@@ -307,7 +305,6 @@ def predict_tpu(
     s = max(min(s, it), 1)
     rounds = math.ceil(it / s)
     rows_local = math.ceil(R / k)
-    cells_local = rows_local * C
 
     # ---- redundant halo rows computed per round (per device) ----
     if cfg.variant in ("spatial_r", "hybrid_r"):
@@ -424,6 +421,7 @@ def choose_best(
     iterations: int | None = None,
     pe_res_override: int | None = None,
     tie_eps: float = 0.05,
+    optimize: bool = True,
 ) -> list[Prediction]:
     """Eq. 9: rank candidate configurations by predicted latency.
 
@@ -431,7 +429,17 @@ def choose_best(
     resource efficiency (fewest spatial groups = fewest HBM banks / ICI
     links), matching the paper's "choose the most resource-efficient one"
     tie-break (Sec. 4.3 step 3).
+
+    With ``optimize`` (the default) the spec is first lowered through the
+    IR pass pipeline (:mod:`repro.core.ir`), so compute terms and op-mix
+    resource estimates are derived from *post-optimization* op counts —
+    the counts the executors actually run — rather than the raw DSL's.
+    Callers that already hold a lowered spec pass ``optimize=False``.
     """
+    if optimize:
+        from repro.core.ir import lower
+
+        spec = lower(spec).spec
     if isinstance(platform, FPGAPlatform):
         cfgs = fpga_candidate_configs(spec, platform, pe_res_override=pe_res_override)
         preds = [predict_fpga(spec, c, platform) for c in cfgs]

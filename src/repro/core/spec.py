@@ -7,9 +7,12 @@ distribution layer, and the analytical performance model.
 Semantics (shared by every executor in the framework):
   * An iteration applies every stage (``local`` stages in declaration order,
     then the ``output`` stage) over the full grid.
-  * Cells outside the grid read as zero ("exterior-zero" boundary), at every
-    iteration.  This matches the behaviour of a streaming FPGA design whose
-    line buffers are zero-initialised and is linear-friendly for testing.
+  * Reads outside the grid are resolved by the spec's :class:`Boundary`
+    rule, at every stage of every iteration (docs/DESIGN.md §Boundary
+    semantics).  The default ``zero`` boundary matches a streaming FPGA
+    design whose line buffers are zero-initialised and is linear-friendly
+    for testing; ``constant``/``replicate``/``periodic`` cover physically
+    meaningful edges (fixed temperature, image edge clamping, tori).
   * Between iterations the designated ``iterate`` input is rebound to the
     previous output (ping-pong buffering, Section 2.1 of the SASA paper).
 """
@@ -17,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Mapping, Sequence, Union
+from typing import Callable, Mapping, Union
 
 import numpy as np
 
@@ -59,13 +62,40 @@ class Neg:
     arg: "Expr"
 
 
-Expr = Union[Num, Ref, BinOp, Call, Neg]
+@dataclasses.dataclass(frozen=True)
+class Var:
+    """Reference to a value bound by an enclosing :class:`Let`."""
+
+    name: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Let:
+    """Bind sub-expressions once, then evaluate ``body``.
+
+    This is the IR node the CSE pass (:mod:`repro.core.ir`) produces: a
+    repeated sub-tree is evaluated a single time and referenced through
+    :class:`Var`.  Bindings evaluate in order; later bindings (and the
+    body) may reference earlier ones.  ``Var`` names live in a namespace
+    separate from array names, so bindings can never shadow an input.
+    """
+
+    bindings: tuple[tuple[str, "Expr"], ...]
+    body: "Expr"
+
+
+Expr = Union[Num, Ref, BinOp, Call, Neg, Var, Let]
 
 INTRINSICS = ("max", "min", "abs")
 
 
 def walk(expr: Expr):
-    """Yield every node of the expression tree."""
+    """Yield every node of the expression tree.
+
+    A :class:`Let` binding's sub-tree is yielded once, no matter how many
+    ``Var`` references consume it — which is exactly what makes
+    :func:`count_ops` report post-CSE op counts.
+    """
     yield expr
     if isinstance(expr, BinOp):
         yield from walk(expr.lhs)
@@ -75,6 +105,10 @@ def walk(expr: Expr):
             yield from walk(a)
     elif isinstance(expr, Neg):
         yield from walk(expr.arg)
+    elif isinstance(expr, Let):
+        for _, bound in expr.bindings:
+            yield from walk(bound)
+        yield from walk(expr.body)
 
 
 def refs_in(expr: Expr) -> list[Ref]:
@@ -93,6 +127,59 @@ def count_ops(expr: Expr) -> int:
         elif isinstance(node, Neg):
             ops += 1
     return ops
+
+
+# --------------------------------------------------------------------------
+# Boundary semantics
+# --------------------------------------------------------------------------
+
+BOUNDARY_KINDS = ("zero", "constant", "replicate", "periodic")
+
+
+@dataclasses.dataclass(frozen=True)
+class Boundary:
+    """How reads outside the grid resolve (docs/DESIGN.md §Boundary).
+
+      zero        out-of-grid cells read 0 (the seed semantics)
+      constant    out-of-grid cells read ``value`` (e.g. fixed-temperature
+                  edges in HOTSPOT-style thermal solvers)
+      replicate   out-of-grid reads clamp to the nearest edge cell (image
+                  filters: BLUR/SOBEL without edge darkening)
+      periodic    out-of-grid reads wrap around (torus domains: spectral /
+                  molecular-dynamics style HEAT3D)
+
+    The rule applies uniformly to every array — inputs and intermediate
+    ``local`` stages alike — at every stage of every iteration.
+    """
+
+    kind: str = "zero"
+    value: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in BOUNDARY_KINDS:
+            raise ValueError(
+                f"unknown boundary kind {self.kind!r} "
+                f"(expected one of {BOUNDARY_KINDS})"
+            )
+        if self.kind != "constant" and self.value != 0.0:
+            raise ValueError(
+                f"boundary value only applies to 'constant', not "
+                f"{self.kind!r}"
+            )
+        if not math.isfinite(self.value):
+            # inf/NaN edges poison every neighbouring cell, and the
+            # bucketed mask+offset form (v * (1 - m)) would turn them
+            # into NaN on IN-grid cells too
+            raise ValueError(
+                f"boundary constant must be finite, got {self.value!r}"
+            )
+
+    @property
+    def is_zero(self) -> bool:
+        return self.kind == "zero"
+
+
+ZERO_BOUNDARY = Boundary("zero")
 
 
 # --------------------------------------------------------------------------
@@ -130,6 +217,7 @@ class StencilSpec:
     inputs: Mapping[str, tuple[str, tuple[int, ...]]]  # name -> (dtype, shape)
     stages: tuple[Stage, ...]
     iterate_input: str  # input rebound to the output between iterations
+    boundary: Boundary = ZERO_BOUNDARY
 
     def __hash__(self):
         # specs are jit static args; normalise the inputs mapping
@@ -139,6 +227,7 @@ class StencilSpec:
             tuple((k, v[0], tuple(v[1])) for k, v in self.inputs.items()),
             self.stages,
             self.iterate_input,
+            self.boundary,
         ))
 
     # ---------------- derived static properties ----------------
@@ -218,6 +307,10 @@ class StencilSpec:
         return ops / bytes_moved
 
     def validate(self) -> None:
+        if self.iterations < 1:
+            raise ValueError(
+                f"iteration count must be >= 1, got {self.iterations}"
+            )
         shapes = {tuple(shape) for _, shape in self.inputs.values()}
         if len(shapes) != 1:
             raise ValueError(f"all inputs must share a shape, got {shapes}")
@@ -227,6 +320,11 @@ class StencilSpec:
             )
         known = set(self.inputs)
         for stage in self.stages:
+            if stage.name in self.inputs:
+                raise ValueError(
+                    f"stage {stage.name!r} shadows an input of the same "
+                    "name; rename the stage"
+                )
             for ref in refs_in(stage.expr):
                 if ref.name not in known:
                     raise ValueError(
@@ -238,9 +336,32 @@ class StencilSpec:
                         f"ref {ref.name}{ref.offsets} has wrong arity for "
                         f"{self.ndim}-D stencil"
                     )
+            _check_vars_bound(stage.expr, frozenset(), stage.name)
             known.add(stage.name)
         if not self.stages or not self.stages[-1].is_output:
             raise ValueError("last stage must be the output stage")
+
+
+def _check_vars_bound(expr: Expr, bound: frozenset, stage: str) -> None:
+    """Every Var must be bound by an enclosing Let (in binding order)."""
+    if isinstance(expr, Var):
+        if expr.name not in bound:
+            raise ValueError(
+                f"stage {stage!r} has unbound let-variable {expr.name!r}"
+            )
+    elif isinstance(expr, BinOp):
+        _check_vars_bound(expr.lhs, bound, stage)
+        _check_vars_bound(expr.rhs, bound, stage)
+    elif isinstance(expr, Call):
+        for a in expr.args:
+            _check_vars_bound(a, bound, stage)
+    elif isinstance(expr, Neg):
+        _check_vars_bound(expr.arg, bound, stage)
+    elif isinstance(expr, Let):
+        for name, e in expr.bindings:
+            _check_vars_bound(e, bound, stage)
+            bound = bound | {name}
+        _check_vars_bound(expr.body, bound, stage)
 
 
 # --------------------------------------------------------------------------
@@ -248,22 +369,36 @@ class StencilSpec:
 # --------------------------------------------------------------------------
 
 
-def eval_expr(expr: Expr, get_ref: Callable[[str, tuple[int, ...]], "object"]):
+def eval_expr(
+    expr: Expr,
+    get_ref: Callable[[str, tuple[int, ...]], "object"],
+    _env: Mapping[str, "object"] | None = None,
+):
     """Evaluate an expression tree.
 
     ``get_ref(name, offsets)`` must return an array (any numpy-like) holding
     the referenced array shifted by ``offsets``; all returned arrays must
-    share a shape.  Scalars broadcast.
+    share a shape.  Scalars broadcast.  ``_env`` carries :class:`Let`
+    bindings — a CSE'd sub-tree is evaluated once per stage application.
     """
     if isinstance(expr, Num):
         return expr.value
     if isinstance(expr, Ref):
         return get_ref(expr.name, expr.offsets)
+    if isinstance(expr, Var):
+        if _env is None or expr.name not in _env:
+            raise ValueError(f"unbound let-variable {expr.name!r}")
+        return _env[expr.name]
+    if isinstance(expr, Let):
+        env = dict(_env) if _env else {}
+        for name, bound in expr.bindings:
+            env[name] = eval_expr(bound, get_ref, env)
+        return eval_expr(expr.body, get_ref, env)
     if isinstance(expr, Neg):
-        return -eval_expr(expr.arg, get_ref)
+        return -eval_expr(expr.arg, get_ref, _env)
     if isinstance(expr, BinOp):
-        lhs = eval_expr(expr.lhs, get_ref)
-        rhs = eval_expr(expr.rhs, get_ref)
+        lhs = eval_expr(expr.lhs, get_ref, _env)
+        rhs = eval_expr(expr.rhs, get_ref, _env)
         if expr.op == "+":
             return lhs + rhs
         if expr.op == "-":
@@ -276,7 +411,7 @@ def eval_expr(expr: Expr, get_ref: Callable[[str, tuple[int, ...]], "object"]):
     if isinstance(expr, Call):
         import jax.numpy as jnp
 
-        args = [eval_expr(a, get_ref) for a in expr.args]
+        args = [eval_expr(a, get_ref, _env) for a in expr.args]
         if expr.fn == "abs":
             return jnp.abs(args[0])
         acc = args[0]

@@ -1,8 +1,8 @@
 """Fused multi-iteration stencil execution on a block (trapezoid scheme).
 
 This is the single implementation of truth for "apply ``s`` stencil
-iterations to a block with exterior-zero boundary masking".  It is shared
-by three executors so they cannot drift apart:
+iterations to a block under the spec's boundary rule".  It is shared by
+three executors so they cannot drift apart (docs/DESIGN.md §Executors):
 
   * the Pallas TPU kernel body (on VMEM-loaded values),
   * the single-device jnp fallback (whole array as one block),
@@ -13,19 +13,32 @@ side.  Each fused iteration invalidates ``r`` rows at each block edge
 (they were computed from in-block zero padding instead of true neighbour
 data), so after ``s`` iterations rows at distance >= s*r from the edge are
 exact.  Callers must provide ``h >= s*r`` and only consume the safe
-interior.  Rows/cols *outside the global grid* are re-zeroed after every
-iteration via masks, which is exactly the reference exterior-zero
-semantics (and is what keeps global-edge blocks correct rather than merely
-their interiors).
+interior.
+
+Boundary handling (docs/DESIGN.md §Boundary semantics): cells *outside
+the global grid* that live inside a block are re-imposed after every
+stage by :func:`boundary_fixup` — zeroed (``zero``), set to the constant
+(``constant``), or gathered from the clamped nearest edge cell
+(``replicate``).  ``periodic`` is the one mode whose row dimension is not
+fixed up in-block: the wrapped rows come in as *data* (host wrap padding
+or wraparound ppermute halo exchange) and go stale per the same trapezoid
+argument, while the column dimensions — always resident in full — are
+re-wrapped in-block each stage.
 """
 from __future__ import annotations
 
-from typing import Mapping
+from typing import Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.spec import Stage, StencilSpec, eval_expr
+from repro.core.spec import (
+    Boundary,
+    Stage,
+    StencilSpec,
+    ZERO_BOUNDARY,
+    eval_expr,
+)
 
 
 def _block_stage(stage: Stage, env: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
@@ -41,6 +54,23 @@ def _block_stage(stage: Stage, env: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
     return eval_expr(stage.expr, get_ref).astype(stage.dtype)
 
 
+def boundary_pad(
+    a: jnp.ndarray, pads: Sequence[tuple[int, int]], boundary: Boundary
+) -> jnp.ndarray:
+    """``jnp.pad`` with the fill the boundary rule prescribes."""
+    pads = list(pads)
+    k = boundary.kind
+    if k == "zero":
+        return jnp.pad(a, pads)
+    if k == "constant":
+        return jnp.pad(a, pads, constant_values=boundary.value)
+    if k == "replicate":
+        return jnp.pad(a, pads, mode="edge")
+    if k == "periodic":
+        return jnp.pad(a, pads, mode="wrap")
+    raise ValueError(f"unknown boundary kind {k!r}")
+
+
 def grid_mask(
     block_shape: tuple[int, ...],
     row0,
@@ -51,7 +81,7 @@ def grid_mask(
     """1.0 where the block cell maps to a real grid cell, else 0.0.
 
     ``row0`` is the global grid row of block row 0 (may be negative /
-    traced).  ``col_pads[d]`` is the zero-padding prepended to non-row dim
+    traced).  ``col_pads[d]`` is the padding prepended to non-row dim
     ``d+1``.
     """
     ndim = len(block_shape)
@@ -63,6 +93,50 @@ def grid_mask(
     return mask.astype(dtype)
 
 
+def boundary_fixup(
+    block: jnp.ndarray,
+    row0,
+    grid_shape: tuple[int, ...],
+    col_pads: tuple[int, ...],
+    boundary: Boundary = ZERO_BOUNDARY,
+) -> jnp.ndarray:
+    """Re-impose the boundary rule on every out-of-grid cell of a block.
+
+    In-grid cells are returned untouched (for replicate/periodic the
+    gather is the identity there), so neighbour-exchanged halo rows — real
+    data — survive.  Replicate assumes the block physically contains the
+    edge cell its out-of-grid cells clamp to; every tiler in the repo
+    guarantees that (Pallas tiles span contiguous rows below ``R``, the
+    distribution layer checks each device owns a real row).  Periodic
+    never fixes the row dimension (wrapped rows arrive as data, see module
+    docstring); columns are re-wrapped in place since blocks always hold
+    the full column extent.
+    """
+    kind = boundary.kind
+    shape = block.shape
+    if kind == "zero":
+        return block * grid_mask(shape, row0, grid_shape, col_pads, block.dtype)
+    if kind == "constant":
+        mask = grid_mask(shape, row0, grid_shape, col_pads, jnp.bool_)
+        return jnp.where(mask, block, jnp.asarray(boundary.value, block.dtype))
+    out = block
+    if kind == "replicate":
+        rows = jnp.arange(shape[0]) + row0
+        tgt = jnp.clip(jnp.clip(rows, 0, grid_shape[0] - 1) - row0,
+                       0, shape[0] - 1)
+        out = jnp.take(out, tgt, axis=0)
+    for d in range(1, len(shape)):
+        pad = col_pads[d - 1]
+        size = grid_shape[d]
+        cols = jnp.arange(shape[d]) - pad
+        if kind == "replicate":
+            tgt = jnp.clip(cols, 0, size - 1) + pad
+        else:  # periodic
+            tgt = jnp.mod(cols, size) + pad
+        out = jnp.take(out, jnp.clip(tgt, 0, shape[d] - 1), axis=d)
+    return out
+
+
 def fused_iterations_on_block(
     spec: StencilSpec,
     blocks: Mapping[str, jnp.ndarray],
@@ -70,26 +144,31 @@ def fused_iterations_on_block(
     row0,
     grid_shape: tuple[int, ...],
     col_pads: tuple[int, ...],
+    boundary: Boundary | None = None,
 ) -> jnp.ndarray:
     """Apply ``s`` fused iterations to a block; returns the iterated array.
 
     ``blocks`` maps every spec input name to a same-shape block (halo rows
-    and zero column padding already included).  Only the ``iterate_input``
-    evolves; other inputs are constant across iterations.
+    and column padding already included).  Only the ``iterate_input``
+    evolves; other inputs are constant across iterations.  ``boundary``
+    defaults to the spec's own rule.
     """
+    boundary = spec.boundary if boundary is None else boundary
     env = {n: jnp.asarray(b) for n, b in blocks.items()}
-    shape = env[spec.iterate_input].shape
-    mask = grid_mask(shape, row0, grid_shape, col_pads, env[spec.iterate_input].dtype)
-    # Inputs may carry garbage outside the grid (e.g. unmasked host padding);
-    # enforce exterior-zero before the first iteration too.
-    env = {n: a * mask for n, a in env.items()}
+
+    def fixup(a):
+        return boundary_fixup(a, row0, grid_shape, col_pads, boundary)
+
+    # Inputs may carry garbage outside the grid (e.g. unmasked host
+    # padding); impose the boundary rule before the first iteration too.
+    env = {n: fixup(a) for n, a in env.items()}
     cur = env[spec.iterate_input]
     for _ in range(s):
         env[spec.iterate_input] = cur
         stage_env = dict(env)
         for stage in spec.stages:
             out = _block_stage(stage, stage_env)
-            out = out * mask  # exterior-zero is re-imposed at every stage
+            out = fixup(out)  # the boundary is re-imposed at every stage
             stage_env[stage.name] = out
         cur = stage_env[spec.output_name]
     return cur
@@ -103,17 +182,40 @@ def fused_iterations_dense(
 ) -> jnp.ndarray:
     """Single-device fused execution: rounds of ceil(iter/s) over the full
     grid held as one block.  Matches ``stencil_iterations_ref`` exactly.
+
+    Non-zero boundaries carry an explicit boundary belt: rows get an
+    ``s*r``-deep boundary-padded halo per round (for periodic this is the
+    wrapped data the in-block fixup never regenerates), columns an
+    ``r``-deep belt the per-stage fixup refreshes.
     """
     grid_shape = spec.shape
     left = iterations
     cur = dict(arrays)
     out = cur[spec.iterate_input]
+    boundary = spec.boundary
+    r = spec.radius
     while left > 0:
         step = min(s, left)
-        out = fused_iterations_on_block(
-            spec, cur, step, row0=0, grid_shape=grid_shape,
-            col_pads=(0,) * (spec.ndim - 1),
-        )
+        if boundary.is_zero:
+            out = fused_iterations_on_block(
+                spec, cur, step, row0=0, grid_shape=grid_shape,
+                col_pads=(0,) * (spec.ndim - 1),
+            )
+        else:
+            h = step * r
+            pads = [(h, h)] + [(r, r)] * (spec.ndim - 1)
+            padded = {
+                n: boundary_pad(jnp.asarray(a), pads, boundary)
+                for n, a in cur.items()
+            }
+            ext = fused_iterations_on_block(
+                spec, padded, step, row0=-h, grid_shape=grid_shape,
+                col_pads=(r,) * (spec.ndim - 1),
+            )
+            sl = (slice(h, h + grid_shape[0]),) + tuple(
+                slice(r, r + c) for c in grid_shape[1:]
+            )
+            out = ext[sl]
         cur[spec.iterate_input] = out
         left -= step
     return out

@@ -1,8 +1,12 @@
-"""Pure-jnp oracle for stencil execution (exact exterior-zero semantics).
+"""Pure-jnp oracle for stencil execution (exact boundary semantics).
 
 Every other executor in the framework (Pallas kernels, shard_map spatial /
 hybrid / temporal-pipeline distributions) must agree with this module
-bit-for-bit up to float associativity.
+bit-for-bit up to float associativity, for every boundary mode the spec
+layer can express (docs/DESIGN.md §Boundary semantics): each stage reads
+every array through the spec's :class:`~repro.core.spec.Boundary`
+extension — zeros, a constant, the clamped edge cell, or the wrapped
+opposite edge.
 """
 from __future__ import annotations
 
@@ -11,7 +15,8 @@ from typing import Mapping
 import jax
 import jax.numpy as jnp
 
-from repro.core.spec import Stage, StencilSpec, eval_expr
+from repro.core.spec import Boundary, Stage, StencilSpec, ZERO_BOUNDARY, eval_expr
+from repro.kernels.blockops import boundary_pad
 
 
 def _shifted(padded: jnp.ndarray, offsets, radius: int, shape) -> jnp.ndarray:
@@ -23,13 +28,16 @@ def _shifted(padded: jnp.ndarray, offsets, radius: int, shape) -> jnp.ndarray:
 
 
 def apply_stage(
-    stage: Stage, arrays: Mapping[str, jnp.ndarray]
+    stage: Stage,
+    arrays: Mapping[str, jnp.ndarray],
+    boundary: Boundary = ZERO_BOUNDARY,
 ) -> jnp.ndarray:
-    """Apply one stencil stage over the full grid with exterior-zero."""
+    """Apply one stencil stage over the full grid with the boundary rule."""
     shape = next(iter(arrays.values())).shape
     r = stage.radius
     padded = {
-        name: jnp.pad(a, [(r, r)] * a.ndim) for name, a in arrays.items()
+        name: boundary_pad(a, [(r, r)] * a.ndim, boundary)
+        for name, a in arrays.items()
     }
 
     def get_ref(name, offsets):
@@ -45,7 +53,7 @@ def stencil_step_ref(
     """One full iteration (all local stages + output stage)."""
     env = dict(arrays)
     for stage in spec.stages:
-        env[stage.name] = apply_stage(stage, env)
+        env[stage.name] = apply_stage(stage, env, spec.boundary)
     return env[spec.output_name]
 
 

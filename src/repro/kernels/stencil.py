@@ -1,7 +1,8 @@
 """Generic Pallas TPU stencil kernel with temporal fusion (SASA single-PE,
 TPU-native re-design).
 
-FPGA -> TPU hardware adaptation (DESIGN.md has the full narrative):
+FPGA -> TPU hardware adaptation (docs/DESIGN.md §FPGA-to-TPU mapping has
+the full narrative):
 
   * SODA's 512-bit coalesced reuse FIFO becomes a VMEM-resident row tile:
     one (tile_rows + 2*s*r, C_pad) block is DMA'd HBM->VMEM per grid step,
@@ -18,6 +19,15 @@ FPGA -> TPU hardware adaptation (DESIGN.md has the full narrative):
 The kernel is generated from the same :class:`StencilSpec` the reference
 executor consumes, and computes with the shared trapezoid helper in
 :mod:`repro.kernels.blockops`, so kernel and oracle cannot drift.
+
+Boundary conditions (docs/DESIGN.md §Boundary semantics): host padding is
+boundary-aware — the row halo and column belt are filled with zeros, the
+constant, the clamped edge, or the wrapped opposite edge — and the kernel
+body re-imposes the rule per stage through the shared
+:func:`~repro.kernels.blockops.boundary_fixup`.  For ``periodic`` the
+wrap-filled row halo *is* the opposite edge's data and goes stale across
+fused iterations exactly like a neighbour tile's halo (same trapezoid
+safety argument); each round re-pads from the full updated grid.
 """
 from __future__ import annotations
 
@@ -31,7 +41,7 @@ from jax.experimental import pallas as pl
 
 from repro.compat import element_block_spec
 from repro.core.spec import StencilSpec
-from repro.kernels.blockops import fused_iterations_on_block
+from repro.kernels.blockops import boundary_pad, fused_iterations_on_block
 
 
 def _round_up(x: int, m: int) -> int:
@@ -99,13 +109,17 @@ def stencil_pallas(
     h, p = g["h"], g["p"]
     ndim = spec.ndim
 
-    # ---- host-side padding: rows by (h, h + tile alignment), cols by p ----
+    # ---- host-side padding: rows by (h, h + tile alignment), cols by p.
+    # The boundary halo is laid down first (wrap/edge/constant fills need
+    # real-data adjacency), then the lane/tile alignment zeros go outside
+    # it, where the trapezoid argument keeps them from reaching the grid.
     def pad_host(a):
-        pads = [(h, h + g["rows_padded"] - R)]
+        bpads = [(h, h)] + [(p, p) for _ in g["col_dims"]]
+        a = boundary_pad(a, bpads, spec.boundary)
+        apads = [(0, g["rows_padded"] - R)]
         for d, c in enumerate(g["col_dims"]):
-            extra = g["padded_cols"][d] - c - 2 * p
-            pads.append((p, p + extra))
-        return jnp.pad(a, pads)
+            apads.append((0, g["padded_cols"][d] - c - 2 * p))
+        return jnp.pad(a, apads)
 
     padded = [pad_host(jnp.asarray(arrays[n])) for n in names]
     col_pads = tuple(p for _ in g["col_dims"])

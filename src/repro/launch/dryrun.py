@@ -51,7 +51,7 @@ RESULTS_PATH = "dryrun_results.json"
 def applicable(cfg, shape_name: str) -> tuple[bool, str]:
     if shape_name == "long_500k" and not cfg.sub_quadratic:
         return False, ("full-attention arch: 500k decode KV would be "
-                       "quadratic-prefill-gated; skipped per DESIGN.md "
+                       "quadratic-prefill-gated; skipped per docs/DESIGN.md "
                        "§Arch-applicability")
     return True, ""
 

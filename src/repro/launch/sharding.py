@@ -20,8 +20,6 @@ stencils is applied here — a declarative plan evaluated per workload):
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any
 
 import jax
 import numpy as np

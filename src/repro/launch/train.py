@@ -14,7 +14,6 @@ from __future__ import annotations
 import argparse
 
 import jax
-import numpy as np
 
 from repro.configs import base as config_base
 from repro.launch import sharding as shlib

@@ -15,9 +15,7 @@ Logical axis vocabulary:
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp

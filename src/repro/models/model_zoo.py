@@ -8,12 +8,10 @@ train/serve entry points the launcher jits.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models import layers as L
 from repro.models import transformer as T

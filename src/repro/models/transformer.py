@@ -16,9 +16,7 @@ cut points (embeddings, attention heads, MLP hidden, logits).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -332,8 +330,6 @@ def _remat_policy(cfg):
 def stack_apply(cfg, pattern, scanned, tail, x, *, positions, mode,
                 caches=None, enc_out=None, enc_positions=None):
     """Run the full layer stack.  caches: (scanned_caches, tail_caches)."""
-    glen = len(pattern)
-    use_cache = caches is not None or mode in ("prefill", "decode")
     sc_caches, tail_caches = caches if caches is not None else (None, None)
 
     def group_fn(x, group_params, group_caches):

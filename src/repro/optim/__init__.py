@@ -1,3 +1,7 @@
 from repro.optim.optimizer import (
     Optimizer, adamw, adafactor, make_optimizer, cosine_schedule,
 )
+
+__all__ = [
+    "Optimizer", "adamw", "adafactor", "make_optimizer", "cosine_schedule",
+]

@@ -9,7 +9,7 @@ bytes (applied before the moment update; moments stay fp32/factored).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

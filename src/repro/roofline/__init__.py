@@ -2,3 +2,8 @@ from repro.roofline.analysis import (
     collective_bytes_from_hlo, roofline_from_compiled, RooflineReport,
     V5E_PEAK_BF16, V5E_HBM_BW, V5E_ICI_BW,
 )
+
+__all__ = [
+    "collective_bytes_from_hlo", "roofline_from_compiled", "RooflineReport",
+    "V5E_PEAK_BF16", "V5E_HBM_BW", "V5E_ICI_BW",
+]

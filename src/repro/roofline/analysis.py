@@ -19,7 +19,6 @@ from __future__ import annotations
 import dataclasses
 import re
 
-import numpy as np
 
 V5E_PEAK_BF16 = 197e12
 V5E_HBM_BW = 819e9

@@ -19,7 +19,9 @@ from repro.runtime.batching import (
 )
 from repro.runtime.bucketing import (
     ShapeBucketer,
+    boundary_fill,
     bucket_spec,
+    check_maskable,
     grid_mask_host,
     mask_input_name,
     masked_spec,
@@ -45,7 +47,9 @@ __all__ = [
     "devices_needed",
     "validate_batch",
     "ShapeBucketer",
+    "boundary_fill",
     "bucket_spec",
+    "check_maskable",
     "grid_mask_host",
     "mask_input_name",
     "masked_spec",

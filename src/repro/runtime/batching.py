@@ -14,8 +14,8 @@ axis threaded through whichever executor the design uses:
 
 Batch-axis semantics: every array in a batch call is ``(B,) + spec.shape``
 and batch entries are fully independent — there is no halo exchange or any
-other coupling across the batch axis, and the exterior-zero boundary
-applies per grid.
+other coupling across the batch axis, and the spec's boundary rule applies
+per grid.
 
 Every runner exposes three dispatch phases for the async serving loop —
 ``run.stage(arrays)`` (host -> device placement), ``run.dispatch(staged)``
@@ -42,6 +42,7 @@ from repro.core.model import ParallelismConfig
 from repro.core.spec import StencilSpec
 from repro.kernels import ops
 from repro.runtime.bucketing import (
+    boundary_fill,
     bucket_spec,
     grid_mask_host,
     mask_input_name,
@@ -242,14 +243,17 @@ def build_bucket_runner(
     inner=None,
 ):
     """Pad-and-mask wrapper: a design compiled for ``bucket_shape`` serving
-    any grid ``<= bucket_shape`` with exact exterior-zero semantics.
+    any grid ``<= bucket_shape`` with the spec's exact boundary semantics.
 
     The compiled artefact is a batched runner for the **masked bucket
     spec** (:func:`repro.runtime.bucketing.bucket_spec`): inputs are
-    zero-padded up to the bucket and a mask input (1 on the real grid,
-    0 on the padding) is multiplied into every stage, so every fused
-    iteration re-imposes the real grid's zero exterior in-kernel.  Interior
+    padded up to the bucket with the boundary fill and a mask input (1 on
+    the real grid, 0 on the padding) is woven into every stage (multiply
+    for a zero boundary, mask+offset for a constant one), so every fused
+    iteration re-imposes the real grid's boundary in-kernel.  Interior
     results are bit-identical to executing the same design unpadded.
+    Replicate/periodic boundaries cannot be expressed this way and are
+    refused by the spec transform (see ``check_maskable``).
 
     ``run(arrays)`` takes one uniform-shape batch ``{name: (B,) + grid}``
     with ``grid <= bucket_shape`` per dimension and returns ``(B,) +
@@ -265,6 +269,7 @@ def build_bucket_runner(
     bucket_shape = tuple(int(b) for b in bucket_shape)
     mspec = bucket_spec(spec, bucket_shape)
     mname = mask_input_name(spec)
+    fill = boundary_fill(spec)
     if inner is None:
         inner = build_batched_runner(
             mspec, cfg, iterations=iterations, devices=devices,
@@ -275,7 +280,7 @@ def build_bucket_runner(
     def run(arrays: Mapping[str, np.ndarray]) -> np.ndarray:
         B, grid = validate_batch(spec, arrays, exact=False)
         padded = {
-            n: pad_batch(np.asarray(arrays[n]), bucket_shape)
+            n: pad_batch(np.asarray(arrays[n]), bucket_shape, fill)
             for n in spec.inputs
         }
         mask = grid_mask_host(grid, bucket_shape, mspec.inputs[mname][0])

@@ -35,15 +35,22 @@ Two pieces:
     could compute non-finite values (a division by streamed data: 0/0 or
     x/0 would survive the mask multiply as NaN) are rejected at transform
     time — see :func:`check_maskable`; serve those exact-shape.
+
+    Boundary rules (docs/DESIGN.md §Boundary semantics): a ``constant v``
+    boundary is re-imposed in-kernel by the mask-plus-offset form
+    ``expr * m + v * (1 - m)`` with the bucket margin host-padded to
+    ``v``; ``replicate``/``periodic`` boundaries depend on per-request
+    edge positions and evolve every iteration, so they are refused at
+    registration — those kernels are served exact-shape instead.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping, Sequence
+from typing import Sequence
 
 import numpy as np
 
-from repro.core.spec import BinOp, Ref, StencilSpec, refs_in, walk
+from repro.core.spec import BinOp, Num, Ref, StencilSpec, refs_in, walk
 
 
 def next_pow2(n: int) -> int:
@@ -146,7 +153,7 @@ def mask_input_name(spec: StencilSpec) -> str:
 
 
 def check_maskable(spec: StencilSpec) -> None:
-    """Reject specs whose padding cells could compute non-finite values.
+    """Reject specs the streamed-mask trick cannot serve bit-exactly.
 
     Masking relies on ``x * 0.0 == 0.0``, which fails for ``x`` = inf/NaN.
     Padding cells hold zeros, so a stage that *divides by streamed data*
@@ -155,7 +162,24 @@ def check_maskable(spec: StencilSpec) -> None:
     the real grid on the next iteration.  Such kernels must be served
     exact-shape (division by constants — every kernel in the benchmark
     suite — is fine).
+
+    Boundary rules: ``zero`` and ``constant`` boundaries are re-imposed
+    in-kernel (mask multiply, respectively mask + offset — see
+    :func:`masked_spec`).  ``replicate``/``periodic`` exteriors depend on
+    per-request edge *positions* inside the shared bucket design, which a
+    streamed 0/1 mask cannot express: the boundary values themselves
+    evolve every iteration, so a host-side pad into the bucket margin
+    diverges after the first iteration.  Those specs are refused at
+    registration time — wrong edges are never served silently.
     """
+    if spec.boundary.kind in ("replicate", "periodic"):
+        raise ValueError(
+            f"spec {spec.name!r} declares a {spec.boundary.kind!r} "
+            "boundary: the streamed bucket mask can only re-impose "
+            "zero/constant exteriors in-kernel, so this kernel cannot be "
+            "shape-bucketed — serve it exact-shape instead (register "
+            "without bucketing)"
+        )
     for stage in spec.stages:
         for node in walk(stage.expr):
             if isinstance(node, BinOp) and node.op == "/":
@@ -171,22 +195,41 @@ def check_maskable(spec: StencilSpec) -> None:
                     )
 
 
+def boundary_fill(spec: StencilSpec) -> float:
+    """The value host padding must carry outside the real grid."""
+    return spec.boundary.value if spec.boundary.kind == "constant" else 0.0
+
+
 def masked_spec(spec: StencilSpec) -> StencilSpec:
-    """Add a constant (non-iterated) mask input multiplied into every stage.
+    """Add a constant (non-iterated) mask input woven into every stage.
 
     With the mask 1.0 on a subregion and 0.0 elsewhere, every stage's
-    writeback is zeroed outside the subregion at every iteration in every
-    executor, which reproduces the exterior-zero boundary of the subregion
-    exactly (local stages included: their padded-region values are zeroed
-    before any consumer reads them at an offset).  Raises for kernels
-    whose padding could turn non-finite (see :func:`check_maskable`).
+    writeback outside the subregion is re-imposed to the spec's boundary
+    value at every iteration in every executor — ``expr * m`` for a zero
+    boundary, ``expr * m + v * (1 - m)`` for a constant-``v`` boundary —
+    which reproduces the subregion's boundary rule exactly (local stages
+    included: their padded-region values are re-imposed before any
+    consumer reads them at an offset).  Raises for kernels the mask trick
+    cannot serve (replicate/periodic boundaries, division by streamed
+    data — see :func:`check_maskable`).
     """
     check_maskable(spec)
     mname = mask_input_name(spec)
     mref = Ref(mname, (0,) * spec.ndim)
+    fill = boundary_fill(spec)
+
+    def weave(expr):
+        masked = BinOp("*", expr, mref)
+        if fill == 0.0:
+            return masked
+        # constant boundary: out-of-grid cells read v, in-grid cells are
+        # expr*1 + v*0 (bit-identical to expr up to +0.0)
+        return BinOp(
+            "+", masked, BinOp("*", Num(fill), BinOp("-", Num(1.0), mref))
+        )
+
     stages = tuple(
-        dataclasses.replace(st, expr=BinOp("*", st.expr, mref))
-        for st in spec.stages
+        dataclasses.replace(st, expr=weave(st.expr)) for st in spec.stages
     )
     inputs = dict(spec.inputs)
     inputs[mname] = (spec.dtype, spec.shape)
@@ -225,8 +268,15 @@ def grid_mask_host(
     return m
 
 
-def pad_grid(a: np.ndarray, bucket_shape: Sequence[int]) -> np.ndarray:
-    """Zero-pad one grid (no batch axis) up to the bucket shape."""
+def pad_grid(
+    a: np.ndarray, bucket_shape: Sequence[int], fill: float = 0.0
+) -> np.ndarray:
+    """Pad one grid (no batch axis) up to the bucket shape with ``fill``.
+
+    ``fill`` is the spec's boundary value (:func:`boundary_fill`): under a
+    constant-``v`` boundary, real edge cells read ``v`` from the bucket
+    margin, exactly what an unpadded run reads from its exterior.
+    """
     a = np.asarray(a)
     bucket_shape = tuple(bucket_shape)
     if a.ndim != len(bucket_shape) or any(
@@ -237,11 +287,16 @@ def pad_grid(a: np.ndarray, bucket_shape: Sequence[int]) -> np.ndarray:
         )
     if tuple(a.shape) == bucket_shape:
         return a
-    return np.pad(a, [(0, b - s) for s, b in zip(a.shape, bucket_shape)])
+    return np.pad(
+        a, [(0, b - s) for s, b in zip(a.shape, bucket_shape)],
+        constant_values=fill,
+    )
 
 
-def pad_batch(a: np.ndarray, bucket_shape: Sequence[int]) -> np.ndarray:
-    """Zero-pad a batched array ``(B,) + grid`` up to ``(B,) + bucket``."""
+def pad_batch(
+    a: np.ndarray, bucket_shape: Sequence[int], fill: float = 0.0
+) -> np.ndarray:
+    """Pad a batched array ``(B,) + grid`` up to ``(B,) + bucket``."""
     a = np.asarray(a)
     bucket_shape = tuple(bucket_shape)
     if a.ndim != len(bucket_shape) + 1 or any(
@@ -254,5 +309,7 @@ def pad_batch(a: np.ndarray, bucket_shape: Sequence[int]) -> np.ndarray:
     if tuple(a.shape[1:]) == bucket_shape:
         return a
     return np.pad(
-        a, [(0, 0)] + [(0, b - s) for s, b in zip(a.shape[1:], bucket_shape)]
+        a,
+        [(0, 0)] + [(0, b - s) for s, b in zip(a.shape[1:], bucket_shape)],
+        constant_values=fill,
     )

@@ -26,6 +26,7 @@ behaviour (see ``StencilServer.stats``).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import hashlib
 import time
@@ -45,14 +46,16 @@ from repro.runtime.batching import (
     degraded_message,
     is_degraded,
 )
-from repro.runtime.bucketing import ShapeBucketer, bucket_spec
+from repro.runtime.bucketing import ShapeBucketer, bucket_spec, check_maskable
 
 
 def structural_fingerprint(spec: StencilSpec) -> str:
     """Content hash of everything about a spec *except* its grid shape.
 
     Two specs with equal structural fingerprints describe the same stencil
-    on (possibly) different grid sizes and can share bucket designs.
+    on (possibly) different grid sizes and can share bucket designs.  The
+    boundary rule is structural: a periodic and a zero-boundary variant of
+    the same expression tree are different kernels.
     """
     payload = repr((
         spec.name,
@@ -61,6 +64,7 @@ def structural_fingerprint(spec: StencilSpec) -> str:
         tuple((k, v[0]) for k, v in spec.inputs.items()),
         spec.stages,
         spec.iterate_input,
+        spec.boundary,
     ))
     return hashlib.sha1(payload.encode()).hexdigest()[:16]
 
@@ -256,15 +260,17 @@ class DesignCache:
         )
         # feasibility retry loop (paper's "build next best design"): the
         # cached runner level memoizes per-config, so a config that built
-        # once keeps winning without re-trying the infeasible ones.
+        # once keeps winning without re-trying the infeasible ones.  The
+        # runner compiles ``tuned.spec`` — the IR-lowered trees the model
+        # ranked — not the raw input spec.
         last_err = None
         run = None
         chosen = None
         for pred in tuned.ranking:
             try:
                 run = self.runner(
-                    spec, pred.config, iterations=iterations, devices=devices,
-                    tile_rows=tile_rows, backend=backend,
+                    tuned.spec, pred.config, iterations=iterations,
+                    devices=devices, tile_rows=tile_rows, backend=backend,
                     align_cols=align_cols, batched=batched, strict=strict,
                 )
                 chosen = pred
@@ -273,7 +279,9 @@ class DesignCache:
                 last_err = e
         if run is None:
             raise RuntimeError(f"no feasible configuration: {last_err}")
-        design = TunedDesign(spec, chosen, tuned.ranking, run)
+        design = TunedDesign(
+            tuned.spec, chosen, tuned.ranking, run, tuned.lowering
+        )
         return CachedDesign(
             design=design, runner=run, fingerprint=fp,
             key=("combined", fp),
@@ -296,6 +304,7 @@ class DesignCache:
         backend: str = "auto",
         align_cols: int = 1,
         strict: bool = False,
+        max_buckets: int | None = None,
     ) -> "BucketedDesign":
         """Register one logical kernel served across many grid shapes.
 
@@ -304,10 +313,21 @@ class DesignCache:
         shape actually requested), all memoized through this cache — so a
         second registration of a structurally identical kernel, even with
         a different declared grid size, reuses every compiled bucket.
+
+        ``max_buckets`` caps the ladder with an LRU policy: when a new
+        bucket would exceed the cap, the least-recently-hit bucket design
+        is evicted (its counters survive and resume if the bucket is ever
+        re-registered).  Specs whose boundary rule cannot be re-imposed
+        in-kernel by the streamed mask (replicate/periodic, or division by
+        streamed data) are refused here, at registration time — never
+        served with wrong edges (see
+        :func:`repro.runtime.bucketing.check_maskable`).
         """
+        spec = _as_spec(source_or_spec)
+        check_maskable(spec)   # refuse un-bucketable kernels loudly, now
         return BucketedDesign(
             cache=self,
-            spec=_as_spec(source_or_spec),
+            spec=spec,
             bucketer=bucketer if bucketer is not None else ShapeBucketer(),
             platform=platform,
             iterations=iterations,
@@ -316,6 +336,7 @@ class DesignCache:
             backend=backend,
             align_cols=align_cols,
             strict=strict,
+            max_buckets=max_buckets,
         )
 
     # ------------------------------------------------------------------
@@ -388,6 +409,16 @@ class BucketedDesign:
     :class:`DesignCache`), and returns the :class:`BucketEntry` whose
     pad-and-mask runner serves the shape.  Per-bucket hit counters live in
     ``BucketEntry.stats`` / :meth:`stats`.
+
+    ``max_buckets`` bounds the ladder of a long-lived registration (the
+    ROADMAP's bucket-eviction item): every ``runner_for`` marks its bucket
+    most-recently-used, and building a bucket past the cap evicts the
+    least-recently-hit entry.  An evicted bucket's counters are archived
+    and resume when the bucket is rebuilt, so serving statistics survive
+    eviction/re-registration cycles.  Eviction drops this registration's
+    reference to the compiled design; the shared :class:`DesignCache`
+    still memoizes it, so a rebuild is a dictionary lookup (cache-level
+    capacity management stays a ROADMAP item).
     """
 
     def __init__(
@@ -395,7 +426,10 @@ class BucketedDesign:
         bucketer: ShapeBucketer, platform=None, iterations=None,
         devices=None, tile_rows: int = 64, backend: str = "auto",
         align_cols: int = 1, strict: bool = False,
+        max_buckets: int | None = None,
     ):
+        if max_buckets is not None and max_buckets < 1:
+            raise ValueError(f"max_buckets must be >= 1, got {max_buckets}")
         self.cache = cache
         self.spec = spec
         self.bucketer = bucketer
@@ -406,8 +440,14 @@ class BucketedDesign:
         self.backend = backend
         self.align_cols = align_cols
         self.strict = strict
+        self.max_buckets = max_buckets
         self.structural = structural_fingerprint(spec)
-        self._entries: dict[tuple[int, ...], BucketEntry] = {}
+        # insertion/access order = LRU order (oldest first)
+        self._entries: "collections.OrderedDict[tuple[int, ...], BucketEntry]" = (
+            collections.OrderedDict()
+        )
+        self._evicted_stats: dict[tuple[int, ...], BucketStats] = {}
+        self.evictions: int = 0
 
     def bucket_for(self, shape: Sequence[int]) -> tuple[int, ...]:
         return self.bucketer.bucket_for(shape)
@@ -420,6 +460,7 @@ class BucketedDesign:
         if entry is not None:
             entry.stats.hits += 1
             entry.stats.requests += count
+            self._entries.move_to_end(bucket)      # most recently hit
             return entry
         bspec = bucket_spec(self.spec, bucket)
         t0 = time.perf_counter()
@@ -433,15 +474,21 @@ class BucketedDesign:
             self.spec, bucket, cached.design.config,
             iterations=self.iterations, inner=cached.runner,
         )
-        stats = BucketStats(
-            misses=1, requests=count,
-            build_time_s=0.0 if cached.hit else time.perf_counter() - t0,
-            cache_hit=cached.hit,
-        )
+        # a previously evicted bucket resumes its archived counters
+        stats = self._evicted_stats.pop(bucket, None) or BucketStats()
+        stats.misses += 1
+        stats.requests += count
+        stats.build_time_s += 0.0 if cached.hit else time.perf_counter() - t0
+        stats.cache_hit = cached.hit
         entry = BucketEntry(
             bucket=bucket, runner=wrapped, cached=cached, stats=stats
         )
         self._entries[bucket] = entry
+        if self.max_buckets is not None:
+            while len(self._entries) > self.max_buckets:
+                old_bucket, old = self._entries.popitem(last=False)
+                self._evicted_stats[old_bucket] = old.stats
+                self.evictions += 1
         return entry
 
     def run(self, shape, arrays) -> "np.ndarray":
@@ -457,7 +504,13 @@ class BucketedDesign:
         return len(self._entries)
 
     def stats(self) -> dict[tuple[int, ...], dict]:
-        return {b: e.stats.as_dict() for b, e in self._entries.items()}
+        """Per-bucket counters, evicted rungs included (marked evicted)."""
+        out = {b: e.stats.as_dict() for b, e in self._entries.items()}
+        for b, s in self._evicted_stats.items():
+            d = s.as_dict()
+            d["evicted"] = True
+            out[b] = d
+        return out
 
 
 _DEFAULT_CACHE = DesignCache()

@@ -66,7 +66,12 @@ import numpy as np
 
 # backward-compatible re-exports (pre-runtime engine.py held the LM engine)
 from repro.serve.lm import Request, ServeEngine  # noqa: F401
-from repro.runtime.bucketing import ShapeBucketer, grid_mask_host, pad_grid
+from repro.runtime.bucketing import (
+    ShapeBucketer,
+    boundary_fill,
+    grid_mask_host,
+    pad_grid,
+)
 from repro.runtime.cache import (
     BucketedDesign,
     DesignCache,
@@ -152,9 +157,11 @@ class StencilServer:
     pushes one zero batch through a freshly compiled design at register
     time so the first real request never pays the compile.  ``bucketing``
     (True / a :class:`ShapeBucketer`) turns registrations into
-    multi-geometry logical kernels; ``async_dispatch`` + ``max_inflight``
-    control the double-buffered dispatch loop; ``strict`` refuses (rather
-    than warns about) designs degraded by a too-small device pool.
+    multi-geometry logical kernels; ``max_buckets`` caps each bucketed
+    registration's ladder with LRU eviction of the least-recently-hit
+    bucket design; ``async_dispatch`` + ``max_inflight`` control the
+    double-buffered dispatch loop; ``strict`` refuses (rather than warns
+    about) designs degraded by a too-small device pool.
     """
 
     def __init__(
@@ -170,6 +177,7 @@ class StencilServer:
         async_dispatch: bool = True,
         max_inflight: int = 2,
         strict: bool = False,
+        max_buckets: int | None = None,
     ):
         assert max_batch >= 1
         assert max_inflight >= 1
@@ -184,6 +192,7 @@ class StencilServer:
         self.async_dispatch = async_dispatch
         self.max_inflight = max_inflight
         self.strict = strict
+        self.max_buckets = max_buckets
         self._designs: dict[str, _Registered] = {}
         self._queue: list[tuple[int, StencilRequest, tuple]] = []
         self._lock = threading.Lock()
@@ -247,7 +256,7 @@ class StencilServer:
                 source_or_spec, bucketer=bucketer, platform=self.platform,
                 iterations=iterations, devices=self.devices,
                 tile_rows=self.tile_rows, backend=self.backend,
-                strict=self.strict,
+                strict=self.strict, max_buckets=self.max_buckets,
             )
             entry = bucketed.runner_for(bucketed.spec.shape, count=0)
             ctr = DesignCounters(
@@ -479,16 +488,19 @@ class StencilServer:
         runner = entry.runner
         mname = runner.mask_name
         mdtype = runner.masked_spec.inputs[mname][0]
+        fill = boundary_fill(spec)
         stacked = {}
         for name in spec.inputs:
             grids = [
-                pad_grid(np.asarray(req.arrays[name]), bucket)
+                pad_grid(np.asarray(req.arrays[name]), bucket, fill)
                 for _, req, _ in chunk
             ]
-            grids += [np.zeros(bucket, grids[0].dtype)] * pad
+            grids += [np.full(bucket, fill, grids[0].dtype)] * pad
             stacked[name] = np.stack(grids)
         # per-entry masks: grids of different shapes share the batch, and
-        # batch-padding entries carry an all-zero mask (outputs zero)
+        # batch-padding entries carry an all-zero mask (their outputs —
+        # zeros, or the boundary constant under mask+offset — are
+        # discarded by post())
         masks = [grid_mask_host(shape, bucket, mdtype) for _, _, shape in chunk]
         masks += [np.zeros(bucket, np.dtype(mdtype))] * pad
         stacked[mname] = np.stack(masks)

@@ -1,1 +1,3 @@
 from repro.train.trainer import Trainer, TrainConfig
+
+__all__ = ["Trainer", "TrainConfig"]

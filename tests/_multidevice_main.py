@@ -14,6 +14,8 @@ os.environ["XLA_FLAGS"] = (
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import dataclasses  # noqa: E402
+
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
@@ -21,6 +23,7 @@ import jax.numpy as jnp  # noqa: E402
 from repro.configs import stencils  # noqa: E402
 from repro.core import distribute  # noqa: E402
 from repro.core.model import ParallelismConfig  # noqa: E402
+from repro.core.spec import Boundary  # noqa: E402
 from repro.kernels import ref  # noqa: E402
 
 
@@ -64,6 +67,87 @@ def main():
                     continue
             check(f"{bench}{shape} it={iters} {cfg.variant}(k={cfg.k},s={cfg.s})",
                   spec, cfg, arrays, iters)
+
+    # boundary-condition sweep on the REAL shard_map paths: every variant
+    # x every boundary mode must match the oracle, including the periodic
+    # wraparound ppermute exchange (device 0 <-> device k-1) and ragged
+    # row shards for replicate/constant
+    boundary_cfgs = [
+        ParallelismConfig("spatial_s", k=8, s=1),   # per-iter ring exchange
+        ParallelismConfig("spatial_s", k=4, s=1),
+        ParallelismConfig("spatial_r", k=2, s=1),
+        ParallelismConfig("hybrid_s", k=4, s=2),    # s*r ring per round
+        ParallelismConfig("hybrid_r", k=2, s=2),
+        ParallelismConfig("temporal", k=1, s=4),
+    ]
+    boundaries = [
+        Boundary("constant", 1.5), Boundary("replicate"),
+        Boundary("periodic"),
+    ]
+    for bench, shape, iters in [
+        ("jacobi2d", (96, 20), 4),
+        ("hotspot", (96, 20), 4),        # two inputs, one iterated
+        ("blur_jacobi2d", (96, 20), 3),  # local stage chain
+        ("heat3d", (64, 6, 6), 4),       # 3-D: two wrapped column dims
+    ]:
+        base = stencils.get(bench, shape=shape, iterations=iters)
+        arrays = {
+            n: jnp.asarray(rng.standard_normal(shp).astype(dt))
+            for n, (dt, shp) in base.inputs.items()
+        }
+        for boundary in boundaries:
+            spec = dataclasses.replace(base, boundary=boundary)
+            for cfg in boundary_cfgs:
+                if cfg.variant in ("spatial_r", "hybrid_r"):
+                    R_k = -(-shape[0] // cfg.k)
+                    if iters * spec.radius > R_k:
+                        continue
+                check(
+                    f"boundary={boundary.kind} {bench}{shape} "
+                    f"{cfg.variant}(k={cfg.k},s={cfg.s})",
+                    spec, cfg, arrays, iters,
+                )
+
+    # ragged rows: periodic must REFUSE (wraparound adjacency broken),
+    # replicate/constant must still be exact
+    ragged = stencils.get("jacobi2d", shape=(70, 13), iterations=4)
+    rag_arrays = {"in_1": jnp.asarray(
+        rng.standard_normal((70, 13)).astype(np.float32))}
+    for boundary in [Boundary("constant", 2.0), Boundary("replicate")]:
+        check(
+            f"ragged boundary={boundary.kind} jacobi2d(70,13) spatial_s(k=4)",
+            dataclasses.replace(ragged, boundary=boundary),
+            ParallelismConfig("spatial_s", k=4, s=1), rag_arrays, 4,
+        )
+    try:
+        distribute.build_runner(
+            dataclasses.replace(ragged, boundary=Boundary("periodic")),
+            ParallelismConfig("spatial_s", k=4, s=1), iterations=4,
+            tile_rows=16,
+        )
+    except ValueError as e:
+        assert "wraparound" in str(e), e
+        print("OK ragged periodic spatial_s refused:", str(e)[:60])
+    else:
+        raise AssertionError("ragged periodic sharding must refuse")
+
+    # the new non-zero-boundary stock kernels end to end on 8 devices
+    for bench, shape in [
+        ("heat3d_periodic", (64, 6, 6)),
+        ("blur_replicate", (96, 20)),
+        ("sobel2d_replicate", (96, 20)),
+    ]:
+        spec = stencils.get(bench, shape=shape, iterations=4)
+        arrays = {
+            n: jnp.asarray(rng.standard_normal(shp).astype(dt))
+            for n, (dt, shp) in spec.inputs.items()
+        }
+        for cfg in [
+            ParallelismConfig("spatial_s", k=8, s=1),
+            ParallelismConfig("hybrid_s", k=4, s=2),
+        ]:
+            check(f"stock {bench}{shape} {cfg.variant}(k={cfg.k},s={cfg.s})",
+                  spec, cfg, arrays, 4)
 
     # batched serving path: B independent grids through one shard_map
     # dispatch must equal B per-grid oracle runs (no cross-batch coupling)
@@ -133,6 +217,35 @@ def main():
                 )
             print(f"OK bucketed {bench}{shape}->{bucket} "
                   f"{cfg.variant}(k={cfg.k},s={cfg.s}) via {run.path}")
+
+    # bucketed serving of a constant-boundary spec on the real shard_map
+    # paths: mask+offset + margin fill must reproduce the oracle exactly
+    spec = dataclasses.replace(
+        stencils.get("jacobi2d", shape=(70, 13), iterations=4),
+        boundary=Boundary("constant", 1.5),
+    )
+    arrays = {
+        n: rng.standard_normal((B,) + (70, 13)).astype(dt)
+        for n, (dt, _) in spec.inputs.items()
+    }
+    for cfg in [
+        ParallelismConfig("spatial_s", k=4, s=1),
+        ParallelismConfig("hybrid_s", k=4, s=2),
+        ParallelismConfig("temporal", k=1, s=4),
+    ]:
+        run = build_bucket_runner(spec, (96, 20), cfg, iterations=4,
+                                  tile_rows=16)
+        got = run(arrays)
+        for b in range(B):
+            want = np.asarray(ref.stencil_iterations_ref(
+                spec, {n: jnp.asarray(a[b]) for n, a in arrays.items()}, 4,
+            ))
+            np.testing.assert_allclose(
+                got[b], want, rtol=2e-4, atol=2e-4,
+                err_msg=f"bucketed constant-boundary {cfg.variant} grid {b}",
+            )
+        print(f"OK bucketed constant-boundary jacobi2d(70,13)->(96,20) "
+              f"{cfg.variant}(k={cfg.k},s={cfg.s})")
 
     print("ALL MULTIDEVICE CHECKS PASSED")
 

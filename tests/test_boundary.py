@@ -1,0 +1,190 @@
+"""Boundary-condition semantics: every stock kernel x every boundary mode.
+
+The acceptance matrix of the boundary generalization (docs/DESIGN.md
+§Boundary semantics): the reference executor defines the truth for each
+mode; the fused jnp fallback and the single-PE Pallas kernel must agree
+to reference-exactness for every benchmark kernel under every boundary.
+The real multi-device shard_map paths (including the periodic wraparound
+ppermute exchange) are covered by ``_multidevice_main.py``; the bucketed
+serving interaction lives in ``test_bucketing.py``.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.configs import stencils
+
+from repro.core.spec import Boundary
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(23)
+
+BOUNDARIES = [
+    Boundary("zero"),
+    Boundary("constant", 1.5),
+    Boundary("replicate"),
+    Boundary("periodic"),
+]
+
+
+def _spec(name, boundary, iterations=3):
+    shape = (12, 6, 6) if name in stencils.BENCHMARKS_3D else (16, 11)
+    base = stencils.get(name, shape=shape, iterations=iterations)
+    return dataclasses.replace(base, boundary=boundary)
+
+
+def _arrays(spec):
+    return {
+        n: jnp.asarray(RNG.standard_normal(shp).astype(dt))
+        for n, (dt, shp) in spec.inputs.items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# reference semantics (hand-computed oracles per mode)
+# ---------------------------------------------------------------------------
+
+
+def _one_step_numpy(x, boundary):
+    """5-point Jacobi step with explicit numpy boundary handling."""
+    if boundary.kind == "zero":
+        p = np.pad(x, 1)
+    elif boundary.kind == "constant":
+        p = np.pad(x, 1, constant_values=boundary.value)
+    elif boundary.kind == "replicate":
+        p = np.pad(x, 1, mode="edge")
+    else:
+        p = np.pad(x, 1, mode="wrap")
+    r, c = x.shape
+    return (
+        p[1:r + 1, 2:c + 2] + p[2:r + 2, 1:c + 1] + p[1:r + 1, 1:c + 1]
+        + p[1:r + 1, 0:c] + p[0:r, 1:c + 1]
+    ) / 5
+
+
+@pytest.mark.parametrize("boundary", BOUNDARIES, ids=lambda b: b.kind)
+def test_ref_matches_numpy_oracle(boundary):
+    spec = _spec("jacobi2d", boundary, iterations=2)
+    x = RNG.standard_normal(spec.shape).astype(np.float32)
+    want = _one_step_numpy(_one_step_numpy(x, boundary), boundary)
+    got = ref.stencil_iterations_ref(spec, {"in_1": jnp.asarray(x)}, 2)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+
+def test_periodic_conserves_mean():
+    """On a torus, averaging stencils conserve the grid mean exactly."""
+    spec = _spec("jacobi2d", Boundary("periodic"), iterations=5)
+    x = RNG.standard_normal(spec.shape).astype(np.float32)
+    out = ref.stencil_iterations_ref(spec, {"in_1": jnp.asarray(x)}, 5)
+    assert float(jnp.mean(out)) == pytest.approx(float(np.mean(x)), abs=1e-5)
+
+
+def test_replicate_preserves_constant_field():
+    """A constant field is a fixed point under clamped-edge averaging."""
+    spec = _spec("blur", Boundary("replicate"), iterations=4)
+    x = np.full(spec.shape, 3.25, np.float32)
+    out = ref.stencil_iterations_ref(spec, {"in_1": jnp.asarray(x)}, 4)
+    np.testing.assert_allclose(np.asarray(out), x, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# the full matrix: kernels x boundaries x executors
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("boundary", BOUNDARIES, ids=lambda b: b.kind)
+@pytest.mark.parametrize("name", sorted(stencils.BENCHMARKS))
+def test_fused_jnp_matches_ref_all_boundaries(name, boundary):
+    spec = _spec(name, boundary)
+    arrays = _arrays(spec)
+    want = ref.stencil_iterations_ref(spec, arrays, 3)
+    got = ops.stencil_run(spec, arrays, 3, s=2, backend="jnp")
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4,
+    )
+
+
+@pytest.mark.parametrize("boundary", BOUNDARIES, ids=lambda b: b.kind)
+@pytest.mark.parametrize("name", sorted(stencils.BENCHMARKS))
+def test_pallas_matches_ref_all_boundaries(name, boundary):
+    spec = _spec(name, boundary)
+    arrays = _arrays(spec)
+    want = ref.stencil_iterations_ref(spec, arrays, 3)
+    got = ops.stencil_run(
+        spec, arrays, 3, s=2, tile_rows=5, backend="pallas"
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4,
+    )
+
+
+@pytest.mark.parametrize("boundary", BOUNDARIES[1:], ids=lambda b: b.kind)
+def test_pallas_ragged_tiles_and_lane_alignment(boundary):
+    """Boundary halos must survive row-tile raggedness + 128-lane padding."""
+    base = stencils.jacobi2d(shape=(13, 10), iterations=4)
+    spec = dataclasses.replace(base, boundary=boundary)
+    arrays = _arrays(spec)
+    want = ref.stencil_iterations_ref(spec, arrays, 4)
+    got = ops.stencil_run(
+        spec, arrays, 4, s=2, tile_rows=4, backend="pallas", align_cols=128,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the new stock kernels carry their boundary declarations
+# ---------------------------------------------------------------------------
+
+
+def test_new_stock_kernels_declare_boundaries():
+    assert stencils.get("heat3d_periodic").boundary == Boundary("periodic")
+    assert stencils.get("blur_replicate").boundary == Boundary("replicate")
+    assert stencils.get("sobel2d_replicate").boundary == \
+        Boundary("replicate")
+    # identical expression trees, different boundary: different kernels
+    from repro.runtime import structural_fingerprint
+
+    a = stencils.get("heat3d", shape=(16, 8, 8))
+    b = dataclasses.replace(
+        stencils.get("heat3d_periodic", shape=(16, 8, 8)), name=a.name
+    )
+    assert structural_fingerprint(a) != structural_fingerprint(b)
+
+
+def test_autotune_end_to_end_nonzero_boundary():
+    """autotune -> runner on the new boundary kernels matches the oracle."""
+    from repro.core import autotune
+
+    for name in ["heat3d_periodic", "blur_replicate"]:
+        shape = (16, 6, 6) if name in stencils.BENCHMARKS_3D else (16, 11)
+        spec = stencils.get(name, shape=shape, iterations=2)
+        design = autotune(spec, tile_rows=8)
+        arrays = {
+            n: RNG.standard_normal(shp).astype(dt)
+            for n, (dt, shp) in spec.inputs.items()
+        }
+        want = ref.stencil_iterations_ref(
+            spec, {n: jnp.asarray(a) for n, a in arrays.items()}, 2
+        )
+        np.testing.assert_allclose(
+            design.runner(arrays), np.asarray(want), rtol=2e-4, atol=2e-4,
+            err_msg=name,
+        )
+
+
+def test_boundary_value_requires_constant():
+    with pytest.raises(ValueError, match="only applies to 'constant'"):
+        Boundary("replicate", 2.0)
+    with pytest.raises(ValueError, match="unknown boundary kind"):
+        Boundary("mirror")
+
+
+def test_boundary_dsl_spec_validates_iterations():
+    with pytest.raises(ValueError, match="iteration count"):
+        dataclasses.replace(
+            stencils.jacobi2d(shape=(8, 8)), iterations=0
+        ).validate()

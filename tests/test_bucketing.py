@@ -299,3 +299,208 @@ def test_autotune_bucket_requires_cache():
     spec = stencils.jacobi2d(shape=(16, 8), iterations=2)
     with pytest.raises(ValueError, match="requires cache"):
         autotune(spec, bucket=True)
+
+
+# ---------------------------------------------------------------------------
+# non-zero boundaries x bucketing: exact or refused, never silently wrong
+# ---------------------------------------------------------------------------
+
+
+def _with_boundary(spec, boundary):
+    import dataclasses
+
+    return dataclasses.replace(spec, boundary=boundary)
+
+
+def test_constant_boundary_bucket_matches_ref_and_is_bit_exact():
+    """constant-v bucketing: mask+offset in-kernel, margin padded to v —
+    allclose vs the oracle AND bit-identical to the unpadded masked run."""
+    from repro.core.spec import Boundary
+
+    iters = 4
+    spec = _with_boundary(
+        stencils.get("jacobi2d", shape=(20, 13), iterations=iters),
+        Boundary("constant", 1.5),
+    )
+    cfg = ParallelismConfig("temporal", k=1, s=2)
+    arrays = batch_for(spec, B=2)
+    out = build_bucket_runner(spec, (32, 16), cfg, tile_rows=8)(arrays)
+    for b in range(2):
+        np.testing.assert_allclose(
+            out[b], oracle(spec, arrays, iters, b), rtol=2e-4, atol=2e-4,
+        )
+    unpadded = build_bucket_runner(spec, (20, 13), cfg, tile_rows=8)(arrays)
+    np.testing.assert_array_equal(out, unpadded)
+
+
+def test_constant_boundary_bucket_hotspot_multi_input():
+    """Both inputs (iterated and constant) read v from the bucket margin."""
+    from repro.core.spec import Boundary
+
+    iters = 3
+    spec = _with_boundary(
+        stencils.get("hotspot", shape=(20, 13), iterations=iters),
+        Boundary("constant", -0.75),
+    )
+    cfg = ParallelismConfig("temporal", k=1, s=3)
+    arrays = batch_for(spec, B=2)
+    out = build_bucket_runner(spec, (32, 16), cfg, tile_rows=8)(arrays)
+    for b in range(2):
+        np.testing.assert_allclose(
+            out[b], oracle(spec, arrays, iters, b), rtol=2e-4, atol=2e-4,
+        )
+
+
+def test_constant_boundary_bucketed_through_server():
+    """The full serving path (_prepare: fill-padded grids, np.full batch
+    padding, per-entry masks) must keep constant edges exact for a
+    mixed-shape micro-batch, short-chunk padding included."""
+    from repro.core.dsl import parse
+    from repro.serve import StencilRequest, StencilServer
+
+    DSL = """
+kernel: HOT-EDGES
+iteration: 3
+boundary: constant 25.0
+input float: t({r}, {c})
+output float: o(0,0) = (t(0,1) + t(1,0) + t(0,0) + t(0,-1) + t(-1,0)) / 5
+"""
+    srv = StencilServer(
+        cache=DesignCache(), max_batch=4, bucketing=True, tile_rows=8,
+    )
+    srv.register("hot", DSL.format(r=20, c=13))
+    shapes = [(20, 13), (18, 10), (40, 40), (25, 9), (19, 12)]
+    reqs = [
+        StencilRequest("hot", {
+            "t": RNG.standard_normal(s).astype(np.float32)
+        })
+        for s in shapes
+    ]
+    outs = srv.serve(reqs)
+    for s, req, out in zip(shapes, reqs, outs):
+        want = np.asarray(ref.stencil_iterations_ref(
+            parse(DSL.format(r=s[0], c=s[1])),
+            {"t": jnp.asarray(req.arrays["t"])}, 3,
+        ))
+        np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4,
+                                   err_msg=str(s))
+
+
+@pytest.mark.parametrize("bad", ["inf", "-inf", "nan"])
+def test_nonfinite_boundary_constants_rejected(bad):
+    """inf/NaN constants would survive the mask multiply as NaN on
+    IN-grid cells (inf * 0) — refused at spec construction and parse."""
+    from repro.core.dsl import parse
+    from repro.core.spec import Boundary
+
+    with pytest.raises(ValueError, match="finite"):
+        Boundary("constant", float(bad))
+    with pytest.raises(SyntaxError, match="finite"):
+        parse(f"""
+kernel: K
+boundary: constant {bad}
+input float: a(8, 8)
+output float: o(0,0) = a(0,0)
+""")
+
+
+@pytest.mark.parametrize("kind", ["replicate", "periodic"])
+def test_replicate_periodic_refused_at_registration(kind):
+    """Un-maskable boundaries are refused loudly — at the spec transform,
+    the cache registration, and the server registration — with an error
+    pointing at exact-shape serving."""
+    from repro.core.spec import Boundary
+    from repro.serve import StencilServer
+
+    spec = _with_boundary(
+        stencils.jacobi2d(shape=(16, 8), iterations=2), Boundary(kind)
+    )
+    with pytest.raises(ValueError, match="serve it exact-shape"):
+        masked_spec(spec)
+    with pytest.raises(ValueError, match="cannot be shape-bucketed"):
+        DesignCache().bucketed(spec)
+    srv = StencilServer(cache=DesignCache(), bucketing=True, max_batch=2)
+    with pytest.raises(ValueError, match="serve it exact-shape"):
+        srv.register("k", spec)
+    # ... while exact-shape (unbucketed) serving works fine
+    srv2 = StencilServer(cache=DesignCache(), max_batch=2, tile_rows=8)
+    srv2.register("k", spec)
+    from repro.serve import StencilRequest
+
+    x = RNG.standard_normal((16, 8)).astype(np.float32)
+    got = srv2.serve([StencilRequest("k", {"in_1": x})])[0]
+    want = np.asarray(
+        ref.stencil_iterations_ref(spec, {"in_1": jnp.asarray(x)}, 2)
+    )
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_new_boundary_stock_kernels_not_bucketable():
+    for name in ["heat3d_periodic", "blur_replicate"]:
+        with pytest.raises(ValueError, match="exact-shape"):
+            DesignCache().bucketed(stencils.get(name, shape=(16, 8, 8)
+                                   if name.startswith("heat") else (16, 8)))
+
+
+# ---------------------------------------------------------------------------
+# LRU bucket eviction (max_buckets)
+# ---------------------------------------------------------------------------
+
+
+def test_lru_eviction_caps_ladder_and_preserves_counters():
+    cache = DesignCache()
+    spec = stencils.jacobi2d(shape=(20, 13), iterations=2)
+    bd = cache.bucketed(spec, tile_rows=8, max_buckets=2)
+    bd.runner_for((20, 13), count=4)         # bucket (32, 16)
+    bd.runner_for((40, 40))                  # bucket (64, 64)
+    assert bd.num_buckets == 2 and bd.evictions == 0
+    bd.runner_for((70, 70))                  # bucket (128, 128): evicts LRU
+    assert bd.num_buckets == 2
+    assert bd.evictions == 1
+    assert (32, 16) not in bd.buckets        # least-recently-hit went first
+    st = bd.stats()
+    assert st[(32, 16)]["evicted"] and st[(32, 16)]["requests"] == 4
+    # rebuilding the evicted bucket resumes its counters (and is a pure
+    # design-cache hit: the shared cache still memoizes the compiled design)
+    misses = cache.misses
+    entry = bd.runner_for((20, 13), count=1)
+    assert cache.misses == misses
+    assert entry.stats.requests == 5 and entry.stats.misses == 2
+    assert (32, 16) in bd.buckets and bd.evictions == 2  # (64,64) evicted
+
+
+def test_lru_order_follows_hits_not_insertion():
+    cache = DesignCache()
+    spec = stencils.jacobi2d(shape=(20, 13), iterations=2)
+    bd = cache.bucketed(spec, tile_rows=8, max_buckets=2)
+    bd.runner_for((20, 13))                  # (32, 16)
+    bd.runner_for((40, 40))                  # (64, 64)
+    bd.runner_for((20, 13))                  # refresh (32, 16): now MRU
+    bd.runner_for((70, 70))                  # evicts (64, 64), not (32, 16)
+    assert set(bd.buckets) == {(32, 16), (128, 128)}
+
+
+def test_max_buckets_validation_and_server_passthrough():
+    cache = DesignCache()
+    spec = stencils.jacobi2d(shape=(20, 13), iterations=2)
+    with pytest.raises(ValueError, match="max_buckets"):
+        cache.bucketed(spec, max_buckets=0)
+    from repro.serve import StencilRequest, StencilServer
+
+    srv = StencilServer(
+        cache=cache, bucketing=True, max_batch=2, tile_rows=8,
+        max_buckets=1,
+    )
+    srv.register("j", spec)
+    for shape in [(20, 13), (40, 40), (18, 10)]:
+        x = RNG.standard_normal(shape).astype(np.float32)
+        got = srv.serve([StencilRequest("j", {"in_1": x})])[0]
+        want = np.asarray(ref.stencil_iterations_ref(
+            stencils.jacobi2d(shape=shape, iterations=2),
+            {"in_1": jnp.asarray(x)}, 2,
+        ))
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+    reg = srv.design("j")
+    assert reg.cached.max_buckets == 1
+    assert reg.cached.num_buckets == 1
+    assert reg.cached.evictions >= 1

@@ -2,7 +2,6 @@
 mesh in a subprocess (the full 512-device sweep runs via
 scripts/run_dryrun_cells.sh; this test keeps the machinery from rotting).
 """
-import json
 import os
 import subprocess
 import sys

@@ -1,8 +1,12 @@
-"""DSL parser tests, including the paper's own listings 2-4."""
+"""DSL parser tests, including the paper's own listings 2-4, the
+``boundary:`` header, spec validation, and the format_spec round trip."""
+import dataclasses
+
 import pytest
 
+from repro.configs import stencils
 from repro.core import dsl
-from repro.core.spec import BinOp, Call, Num, Ref
+from repro.core.spec import BinOp, Boundary, Call, Num
 
 LISTING2 = """
 kernel: JACOBI2D
@@ -95,6 +99,125 @@ output float: o(0,0) = a(0,0) + b(0,0)
 def test_rejects_malformed(bad):
     with pytest.raises((SyntaxError, ValueError)):
         dsl.parse(bad)
+
+
+BOUNDARY_TEMPLATE = """
+kernel: K
+iteration: 2
+{header}
+input float: a(8, 8)
+output float: o(0,0) = a(0,1) + a(1,0)
+"""
+
+
+@pytest.mark.parametrize("header,want", [
+    ("", Boundary("zero")),
+    ("boundary: zero", Boundary("zero")),
+    ("boundary: constant 1.5", Boundary("constant", 1.5)),
+    ("boundary: constant -2", Boundary("constant", -2.0)),
+    ("boundary: replicate", Boundary("replicate")),
+    ("boundary: periodic", Boundary("periodic")),
+])
+def test_boundary_header(header, want):
+    spec = dsl.parse(BOUNDARY_TEMPLATE.format(header=header))
+    assert spec.boundary == want
+
+
+@pytest.mark.parametrize("header,msg", [
+    ("boundary: wavy", "unknown boundary"),
+    ("boundary: constant", "exactly one value"),
+    ("boundary: constant x", "must be a number"),
+    ("boundary: constant 1 2", "exactly one value"),
+    ("boundary: periodic 3", "takes no value"),
+    ("boundary: replicate zero", "takes no value"),
+])
+def test_boundary_header_errors(header, msg):
+    with pytest.raises(SyntaxError, match=msg):
+        dsl.parse(BOUNDARY_TEMPLATE.format(header=header))
+
+
+@pytest.mark.parametrize("bad,msg", [
+    ("iteration: 0", "must be >= 1"),
+    ("iteration: -3", "must be >= 1"),
+    ("iteration: many", "must be an integer"),
+])
+def test_rejects_bad_iteration_counts(bad, msg):
+    with pytest.raises(SyntaxError, match=msg):
+        dsl.parse(f"kernel: K\n{bad}\ninput float: a(8,8)\n"
+                  "output float: o(0,0) = a(0,0)")
+
+
+def test_rejects_duplicate_input_declaration():
+    """The inputs dict used to silently overwrite the first declaration."""
+    with pytest.raises(SyntaxError, match="duplicate input"):
+        dsl.parse("""
+kernel: K
+input float: a(8, 8)
+input float: a(16, 16)
+output float: o(0,0) = a(0,0)
+""")
+
+
+def test_rejects_stage_shadowing_input():
+    with pytest.raises(SyntaxError, match="shadows the input"):
+        dsl.parse("""
+kernel: K
+input float: a(8, 8)
+local float: a(0,0) = a(0,0) * 2
+output float: o(0,0) = a(0,0)
+""")
+
+
+def test_rejects_duplicate_stage():
+    with pytest.raises(SyntaxError, match="duplicate stage"):
+        dsl.parse("""
+kernel: K
+input float: a(8, 8)
+local float: t(0,0) = a(0,0)
+local float: t(0,0) = a(0,1)
+output float: o(0,0) = t(0,0)
+""")
+
+
+# ---------------------------------------------------------------------------
+# format_spec round trip
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(stencils.BENCHMARKS))
+def test_format_spec_roundtrip_identity(name):
+    """parse(format_spec(spec)) is structurally identical for every stock
+    kernel (boundary declarations included)."""
+    shape = (32, 8, 8) if name in stencils.BENCHMARKS_3D else (32, 16)
+    spec = stencils.get(name, shape=shape, iterations=3)
+    assert dsl.parse(dsl.format_spec(spec)) == spec
+
+
+@pytest.mark.parametrize("boundary", [
+    Boundary("zero"), Boundary("constant", -0.25), Boundary("replicate"),
+    Boundary("periodic"),
+], ids=lambda b: b.kind)
+def test_format_spec_roundtrip_all_boundaries(boundary):
+    spec = dataclasses.replace(
+        stencils.hotspot(shape=(16, 8), iterations=2), boundary=boundary
+    )
+    again = dsl.parse(dsl.format_spec(spec))
+    assert again == spec
+    assert again.boundary == boundary
+
+
+def test_format_spec_inlines_lowered_lets():
+    """A CSE'd spec prints as plain DSL (Let has no surface syntax) and
+    re-parses to the same semantics, pre-CSE."""
+    from repro.core.ir import lower
+
+    spec = stencils.heat3d(shape=(16, 6, 6), iterations=2)
+    low = lower(spec).spec
+    again = dsl.parse(dsl.format_spec(low))
+    # the reparsed spec is the un-CSE'd tree: same taps, more ops
+    assert again.radius == low.radius
+    assert again.ops_per_cell >= low.ops_per_cell
+    assert lower(again).spec.ops_per_cell == low.ops_per_cell
 
 
 def test_scientific_notation_constants():

@@ -1,0 +1,214 @@
+"""IR lowering pipeline: pass semantics, op-delta reports, wiring."""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import stencils
+from repro.core import autotune, dsl, ir, model
+from repro.core.ir import (
+    eliminate_common_subexpressions,
+    fold_constants,
+    lower,
+    simplify_algebraic,
+)
+from repro.core.spec import BinOp, Let, Num, Ref, Var, count_ops, walk
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(11)
+
+
+def _expr(text, shape=(8, 8)):
+    spec = dsl.parse(f"""
+kernel: T
+iteration: 1
+input float: x({shape[0]}, {shape[1]})
+output float: o(0,0) = {text}
+""")
+    return spec, spec.output_stage.expr
+
+
+# ---------------------------------------------------------------------------
+# individual passes
+# ---------------------------------------------------------------------------
+
+
+def test_fold_constants():
+    _, e = _expr("x(0,0) * (2 * 3) + max(1, 2, 5) - abs(0 - 4)")
+    f = fold_constants(e)
+    nums = [n.value for n in walk(f) if isinstance(n, Num)]
+    assert 6.0 in nums and 5.0 in nums and 4.0 in nums
+    assert count_ops(f) < count_ops(e)
+
+
+def test_fold_preserves_division_by_zero():
+    _, e = _expr("x(0,0) + 1 / 0")
+    f = fold_constants(e)
+    assert count_ops(f) == count_ops(e)  # 1/0 left for runtime inf
+
+
+@pytest.mark.parametrize("text,expected_ops", [
+    ("x(0,0) * 1", 0),           # x*1 -> x
+    ("1 * x(0,0)", 0),           # 1*x -> x
+    ("x(0,0) + 0", 0),           # x+0 -> x
+    ("0 + x(0,0)", 0),           # 0+x -> x
+    ("x(0,0) - 0", 0),           # x-0 -> x
+    ("x(0,0) / 1", 0),           # x/1 -> x
+    ("0 * x(0,1)", 0),           # 0*x -> 0
+    ("x(0,1) * 0", 0),           # x*0 -> 0
+    ("--x(0,0)", 0),             # double negation
+    ("0 - (0 - x(0,0))", 0),     # exposes --x at the same node
+    ("0 - x(0,0)", 1),           # 0-x -> -x (still one op)
+])
+def test_simplify_algebraic(text, expected_ops):
+    _, e = _expr(text)
+    assert count_ops(simplify_algebraic(fold_constants(e))) == expected_ops
+
+
+def test_cse_binds_repeated_subtrees_once():
+    _, e = _expr("(2 * x(0,0)) + (2 * x(0,0)) + (2 * x(0,0))")
+    c = eliminate_common_subexpressions(e)
+    assert isinstance(c, Let)
+    assert count_ops(c) == 3      # one shared multiply + two adds
+    assert count_ops(e) == 5
+
+
+def test_cse_binds_repeated_refs():
+    _, e = _expr("x(0,1) + x(0,1) + x(1,0)")
+    c = eliminate_common_subexpressions(e)
+    assert isinstance(c, Let)
+    # the repeated tap is bound once; ops unchanged (refs are free)
+    bound = [b for _, b in c.bindings]
+    assert Ref("x", (0, 1)) in bound
+    assert count_ops(c) == count_ops(e) == 2
+
+
+def test_cse_nested_repeats_are_well_ordered():
+    _, e = _expr("(x(0,1) + 1) + (x(0,1) + 1) + x(0,1)")
+    c = eliminate_common_subexpressions(e)
+    assert isinstance(c, Let)
+    names = [n for n, _ in c.bindings]
+    # the inner repeated tap binds before the tree containing it
+    assert len(names) == 2
+    inner_name, outer_name = names
+    outer_expr = dict(c.bindings)[outer_name]
+    assert Var(inner_name) in list(walk(outer_expr))
+
+
+# ---------------------------------------------------------------------------
+# pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_lower_reduces_heat3d_with_report():
+    spec = stencils.heat3d(shape=(16, 8, 8), iterations=2)
+    low = lower(spec)
+    assert low.ops_per_cell < spec.ops_per_cell
+    assert low.ops_removed == spec.ops_per_cell - low.ops_per_cell
+    assert [r.name for r in low.reports] == [
+        "fold-constants", "simplify-algebraic", "cse"
+    ]
+    cse = low.reports[-1]
+    assert cse.delta > 0
+    assert "cse" in str(cse)
+    assert spec.name in low.summary()
+
+
+def test_lower_is_idempotent_for_all_stock_kernels():
+    for name in stencils.BENCHMARKS:
+        shape = (16, 8, 8) if name in stencils.BENCHMARKS_3D else (16, 8)
+        spec = stencils.get(name, shape=shape, iterations=2)
+        once = lower(spec).spec
+        twice = lower(once).spec
+        assert once == twice, name
+
+
+def test_lowered_spec_evaluates_identically():
+    """Lowering is semantics-preserving to the bit, per executor."""
+    for name in ["heat3d", "hotspot", "sobel2d", "blur_jacobi2d"]:
+        shape = (12, 5, 5) if name in stencils.BENCHMARKS_3D else (12, 9)
+        spec = stencils.get(name, shape=shape, iterations=3)
+        low = lower(spec).spec
+        arrays = {
+            n: jnp.asarray(RNG.standard_normal(shp).astype(dt))
+            for n, (dt, shp) in spec.inputs.items()
+        }
+        want = np.asarray(ref.stencil_iterations_ref(spec, arrays, 3))
+        np.testing.assert_array_equal(
+            np.asarray(ref.stencil_iterations_ref(low, arrays, 3)), want,
+            err_msg=f"ref {name}",
+        )
+        got = ops.stencil_run(low, arrays, 3, s=2, tile_rows=8,
+                              backend="pallas")
+        np.testing.assert_allclose(
+            np.asarray(got), want, rtol=2e-4, atol=2e-4,
+            err_msg=f"pallas {name}",
+        )
+
+
+def test_inline_lets_roundtrip():
+    spec = stencils.heat3d(shape=(12, 5, 5), iterations=2)
+    low = lower(spec).spec
+    inlined = ir.inline_lets(low.output_stage.expr)
+    assert not any(isinstance(n, (Let, Var)) for n in walk(inlined))
+    # inlining restores the pre-CSE (folded/simplified) tree's op count
+    assert count_ops(inlined) >= count_ops(low.output_stage.expr)
+
+
+def test_lowered_spec_rejects_unbound_var():
+    spec = stencils.jacobi2d(shape=(8, 8), iterations=1)
+    bad = dataclasses.replace(
+        spec,
+        stages=(dataclasses.replace(
+            spec.stages[0], expr=BinOp("+", Var("ghost"), Num(1.0))
+        ),),
+    )
+    with pytest.raises(ValueError, match="unbound let-variable"):
+        bad.validate()
+
+
+# ---------------------------------------------------------------------------
+# wiring: model + autotune consume post-optimization counts
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_consumes_optimized_ops():
+    spec = stencils.heat3d(shape=(64, 8, 8), iterations=2)
+    design = autotune(spec, build=False)
+    assert design.spec.ops_per_cell < spec.ops_per_cell
+    assert any(r.delta > 0 for r in design.lowering)
+
+
+def test_choose_best_optimize_flag_changes_compute_term():
+    spec = stencils.heat3d(shape=(256, 16, 16), iterations=4)
+    from repro.core.platform import DEFAULT_TPU
+
+    tpu = DEFAULT_TPU.with_chips(1)
+    raw = model.choose_best(spec, tpu, optimize=False)
+    opt = model.choose_best(spec, tpu, optimize=True)
+    raw_t = {p.config: p for p in raw}
+    assert all(
+        p.flops <= raw_t[p.config].flops for p in opt
+    ) and any(p.flops < raw_t[p.config].flops for p in opt)
+
+
+def test_cached_design_runs_lowered_spec():
+    """The design cache compiles the optimized trees, not the raw DSL's."""
+    from repro.runtime import DesignCache
+
+    cache = DesignCache()
+    spec = stencils.heat3d(shape=(16, 6, 6), iterations=2)
+    cached = cache.get_or_build(spec, tile_rows=8)
+    assert cached.design.spec.ops_per_cell < spec.ops_per_cell
+    arrays = {
+        n: RNG.standard_normal((2,) + shp).astype(dt)
+        for n, (dt, shp) in spec.inputs.items()
+    }
+    out = cached.runner(arrays)
+    for b in range(2):
+        one = {n: jnp.asarray(a[b]) for n, a in arrays.items()}
+        np.testing.assert_allclose(
+            out[b], np.asarray(ref.stencil_iterations_ref(spec, one, 2)),
+            rtol=2e-4, atol=2e-4,
+        )

@@ -8,7 +8,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs import stencils
 from repro.core import dsl, model
-from repro.core.model import ParallelismConfig
+from repro.core import spec as spec_mod
 from repro.core.platform import DEFAULT_TPU
 from repro.kernels import ops, ref
 
@@ -82,6 +82,33 @@ def test_intensity_linear_in_iterations(it):
     """Fig. 1b: computation intensity grows linearly with iterations."""
     spec = stencils.jacobi2d(iterations=it)
     assert spec.computation_intensity(it) == it * spec.computation_intensity(1)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    name=st.sampled_from(sorted(stencils.BENCHMARKS)),
+    shape=grids(8, 40),
+    iters=st.integers(1, 64),
+    boundary=st.one_of(
+        st.sampled_from(["zero", "replicate", "periodic"]).map(
+            lambda k: spec_mod.Boundary(k)
+        ),
+        st.floats(-10, 10, allow_nan=False).map(
+            lambda v: spec_mod.Boundary("constant", float(v))
+        ),
+    ),
+)
+def test_format_spec_parse_roundtrip_property(name, shape, iters, boundary):
+    """parse(format_spec(spec)) is the identity over every stock kernel,
+    randomized across shapes, iteration counts, and boundary rules."""
+    import dataclasses
+
+    full = (shape[0], shape[1], 8) if name in stencils.BENCHMARKS_3D \
+        else shape
+    spec = dataclasses.replace(
+        stencils.get(name, shape=full, iterations=iters), boundary=boundary
+    )
+    assert dsl.parse(dsl.format_spec(spec)) == spec
 
 
 @settings(max_examples=15, deadline=None)

@@ -1,5 +1,4 @@
 """Roofline HLO analyzer: trip-count scaling, dot FLOPs, collective bytes."""
-import numpy as np
 
 from repro.roofline.analysis import (analyze_hlo, collective_bytes_from_hlo,
                                      _shape_bytes)
