@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Slow-marker audit: keep tier-1 wall-clock honest as the suite grows.
+
+Static checks (no test execution) run by scripts/ci.sh:
+
+  1. every test module that launches the multi-device / subprocess
+     helpers carries ``@pytest.mark.slow`` somewhere, so
+     ``scripts/ci.sh fast`` (-m "not slow") really skips them;
+  2. pytest.ini registers the ``slow`` marker (a typo'd marker silently
+     deselects nothing);
+  3. the conformance suite caps its hypothesis profile for CI (the
+     ``ci`` profile must exist and be the env-var default) and keeps a
+     ``nightly`` profile for the scheduled deep-fuzz job;
+  4. the conformance suite's pinned floor stays >= 200 random specs
+     (the acceptance bar: N_BLOCKS * BLOCK).
+
+Exits non-zero with an actionable message on any violation.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+TESTS = ROOT / "tests"
+
+SUBPROCESS_HELPERS = ("_multidevice_main", "_ep_moe_main")
+
+
+def fail(msg: str) -> None:
+    print(f"slow-marker audit: FAIL: {msg}")
+    sys.exit(1)
+
+
+def main() -> None:
+    # 1. subprocess-launching test modules must be slow-marked (a mere
+    # docstring mention of a helper does not count as a launch)
+    for test_file in sorted(TESTS.glob("test_*.py")):
+        text = test_file.read_text()
+        launches = "import subprocess" in text and any(
+            h in text for h in SUBPROCESS_HELPERS + ("_main.py",)
+        )
+        if launches and "pytest.mark.slow" not in text:
+            fail(
+                f"{test_file.name} launches a subprocess helper but "
+                "has no @pytest.mark.slow marker — 'ci.sh fast' "
+                "would not skip it"
+            )
+
+    # 2. the marker must be registered
+    ini = (ROOT / "pytest.ini").read_text()
+    if not re.search(r"^\s*slow\s*:", ini, re.MULTILINE):
+        fail("pytest.ini does not register the 'slow' marker")
+
+    # 3. conformance hypothesis profiles: ci-capped, nightly available
+    # (whitespace-insensitive so a reformat cannot trip the audit)
+    conf = (TESTS / "test_conformance.py").read_text()
+    for pattern, why in [
+        (r'register_profile\(\s*"ci"', "the capped CI profile"),
+        (r'register_profile\(\s*"nightly"', "the nightly profile"),
+        (r'os\.environ\.get\(\s*"HYPOTHESIS_PROFILE",\s*"ci"\s*\)',
+         "the env-selected default profile"),
+    ]:
+        if not re.search(pattern, conf):
+            fail(f"test_conformance.py lost {why}")
+    m = re.search(
+        r'"ci", max_examples=(\d+)', conf
+    )
+    if not m or int(m.group(1)) > 50:
+        fail(
+            "the conformance 'ci' hypothesis profile must cap "
+            "max_examples at <= 50 (tier-1 wall-clock)"
+        )
+
+    # 4. the pinned conformance floor stays >= 200 specs
+    m = re.search(r"N_BLOCKS, BLOCK = (\d+), (\d+)", conf)
+    if not m or int(m.group(1)) * int(m.group(2)) < 200:
+        fail(
+            "the seed-pinned conformance floor dropped below 200 "
+            "random specs (N_BLOCKS * BLOCK)"
+        )
+
+    print("slow-marker audit: OK (subprocess suites slow-marked; "
+          "hypothesis ci profile capped; conformance floor >= 200)")
+
+
+if __name__ == "__main__":
+    main()

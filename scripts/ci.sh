@@ -24,8 +24,17 @@ else
   python -m compileall -q src tests benchmarks examples scripts
 fi
 
+echo "== slow-marker audit =="
+# static guard: subprocess suites stay slow-marked, the conformance
+# suite's hypothesis profile stays CI-capped, and the pinned random-spec
+# floor stays >= 200 — so the growing suite can't silently blow up
+# tier-1 wall-clock
+python scripts/audit_slow_markers.py
+
 echo "== tier-1: pytest =="
-python -m pytest -x -q "${MARK[@]}"
+# --durations=15 prints the slowest tests on every run, making
+# wall-clock regressions visible in the CI log before they hurt
+python -m pytest -x -q --durations=15 "${MARK[@]}"
 
 echo "== smoke: examples/quickstart.py =="
 python examples/quickstart.py

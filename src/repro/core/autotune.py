@@ -89,7 +89,9 @@ def autotune(
         if not build:
             from repro.runtime.bucketing import bucket_spec as _bucket_spec
 
-            bucket_shape = bd.bucketer.bucket_for(spec.shape)
+            # bd.bucket_for routes through the spec's halo margins
+            # (periodic reserves iterations*radius per side)
+            bucket_shape = bd.bucket_for(spec.shape)
             return cache.design(
                 _bucket_spec(spec, bucket_shape), platform=platform,
                 iterations=iterations, devices=devices,

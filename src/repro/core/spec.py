@@ -218,6 +218,15 @@ class StencilSpec:
     stages: tuple[Stage, ...]
     iterate_input: str  # input rebound to the output between iterations
     boundary: Boundary = ZERO_BOUNDARY
+    # Streamed halo-index plumbing (docs/DESIGN.md §Boundaries × bucketed
+    # serving): when non-empty, one input name per dimension naming an
+    # int32 grid-shaped array of *source coordinates*.  After every stage
+    # the shared trapezoid helper re-imposes ``out[i, j, ...] =
+    # out[idx0[i], idx1[j], ...]`` (per-axis gather), which lets a padded
+    # bucket design re-create a smaller real grid's clamped-edge
+    # (replicate) exterior from per-request streamed data.  Stages never
+    # read these inputs; they ride the executors like any other array.
+    halo_index_inputs: tuple[str, ...] = ()
 
     def __hash__(self):
         # specs are jit static args; normalise the inputs mapping
@@ -228,6 +237,7 @@ class StencilSpec:
             self.stages,
             self.iterate_input,
             self.boundary,
+            self.halo_index_inputs,
         ))
 
     # ---------------- derived static properties ----------------
@@ -340,6 +350,17 @@ class StencilSpec:
             known.add(stage.name)
         if not self.stages or not self.stages[-1].is_output:
             raise ValueError("last stage must be the output stage")
+        if self.halo_index_inputs:
+            if len(self.halo_index_inputs) != self.ndim:
+                raise ValueError(
+                    f"halo_index_inputs must name one input per dimension "
+                    f"({self.ndim}), got {self.halo_index_inputs}"
+                )
+            for n in self.halo_index_inputs:
+                if n not in self.inputs:
+                    raise ValueError(
+                        f"halo index input {n!r} is not a declared input"
+                    )
 
 
 def _check_vars_bound(expr: Expr, bound: frozenset, stage: str) -> None:

@@ -137,6 +137,43 @@ def boundary_fixup(
     return out
 
 
+def streamed_halo_fixup(
+    block: jnp.ndarray,
+    env: Mapping[str, jnp.ndarray],
+    spec: StencilSpec,
+    row0,
+    col_pads: tuple[int, ...],
+) -> jnp.ndarray:
+    """Re-impose a *streamed* (per-request) boundary on a block.
+
+    ``spec.halo_index_inputs`` names one int32 input per dimension whose
+    cells hold the global grid coordinate each cell should copy from
+    (identity on the real region, clamp target on the padding belt of a
+    bucket design).  The per-axis gather composes exactly like
+    ``np.pad``'s per-axis edge extension, so after every stage the belt
+    holds the smaller real grid's clamped exterior — in every executor,
+    since they all compute through this helper.
+
+    Locality: the gather target is converted to block-local coordinates
+    (``- row0`` on the tiled/sharded row dim, ``+ col_pads`` on the fully
+    resident column dims) and clipped to the block.  Clamp targets are
+    the nearest real edge cells, which every tiler/shard holds in any
+    block that owns belt cells within the trapezoid-safe depth (the same
+    guarantee the non-bucketed replicate fixup relies on); deeper belt
+    cells may gather clipped garbage, but their values never reach the
+    safe interior within a round and are re-imposed or sliced off
+    outside it.
+    """
+    names = spec.halo_index_inputs
+    out = block
+    for d, name in enumerate(names):
+        idx = env[name]
+        tgt = idx - row0 if d == 0 else idx + col_pads[d - 1]
+        tgt = jnp.clip(tgt, 0, out.shape[d] - 1).astype(jnp.int32)
+        out = jnp.take_along_axis(out, tgt, axis=d)
+    return out
+
+
 def fused_iterations_on_block(
     spec: StencilSpec,
     blocks: Mapping[str, jnp.ndarray],
@@ -151,7 +188,11 @@ def fused_iterations_on_block(
     ``blocks`` maps every spec input name to a same-shape block (halo rows
     and column padding already included).  Only the ``iterate_input``
     evolves; other inputs are constant across iterations.  ``boundary``
-    defaults to the spec's own rule.
+    defaults to the spec's own rule.  Specs carrying streamed halo-index
+    inputs (bucketed replicate serving) additionally re-impose the
+    per-request boundary via :func:`streamed_halo_fixup` after every
+    stage, *before* the block-level boundary rule so out-of-grid cells
+    clamp to the re-imposed belt.
     """
     boundary = spec.boundary if boundary is None else boundary
     env = {n: jnp.asarray(b) for n, b in blocks.items()}
@@ -161,6 +202,19 @@ def fused_iterations_on_block(
 
     # Inputs may carry garbage outside the grid (e.g. unmasked host
     # padding); impose the boundary rule before the first iteration too.
+    # Streamed specs also re-impose the per-request belt on entry: a block
+    # whose copy of the gather source went stale late in the *previous*
+    # round can hand a neighbour stale belt rows (real/belt edge
+    # straddling a tile or shard boundary) — the entry gather repairs
+    # every consumed belt cell from the committed real values before the
+    # first stage reads it.
+    streamed = bool(spec.halo_index_inputs)
+    if streamed:
+        src = dict(env)
+        env = {
+            n: streamed_halo_fixup(a, src, spec, row0, col_pads)
+            for n, a in env.items()
+        }
     env = {n: fixup(a) for n, a in env.items()}
     cur = env[spec.iterate_input]
     for _ in range(s):
@@ -168,6 +222,8 @@ def fused_iterations_on_block(
         stage_env = dict(env)
         for stage in spec.stages:
             out = _block_stage(stage, stage_env)
+            if streamed:
+                out = streamed_halo_fixup(out, stage_env, spec, row0, col_pads)
             out = fixup(out)  # the boundary is re-imposed at every stage
             stage_env[stage.name] = out
         cur = stage_env[spec.output_name]

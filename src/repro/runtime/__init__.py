@@ -7,8 +7,9 @@ single-PE Pallas kernel and the shard_map runners so one compiled design
 serves many independent grids per dispatch; ``ShapeBucketer`` +
 ``build_bucket_runner`` + ``DesignCache.bucketed`` let one logical kernel
 registration serve heterogeneous grid shapes from a small ladder of
-padded, masked bucket designs.  ``repro.serve.engine`` builds the
-request-facing server on these pieces.
+padded bucket designs, under any boundary mode (streamed mask, halo-index
+gathers, or host-streamed periodic wrap margins).  ``repro.serve.engine``
+builds the request-facing server on these pieces.
 """
 from repro.runtime.batching import (
     DegradedDesignWarning,
@@ -18,15 +19,21 @@ from repro.runtime.batching import (
     validate_batch,
 )
 from repro.runtime.bucketing import (
+    BucketPlan,
     ShapeBucketer,
     boundary_fill,
+    bucket_margins,
+    bucket_plan,
     bucket_spec,
-    check_maskable,
+    check_bucketable,
     grid_mask_host,
+    halo_index_host,
+    halo_index_names,
     mask_input_name,
     masked_spec,
     pad_batch,
     pad_grid,
+    padded_request_shape,
     with_shape,
 )
 from repro.runtime.cache import (
@@ -46,15 +53,21 @@ __all__ = [
     "build_bucket_runner",
     "devices_needed",
     "validate_batch",
+    "BucketPlan",
     "ShapeBucketer",
     "boundary_fill",
+    "bucket_margins",
+    "bucket_plan",
     "bucket_spec",
-    "check_maskable",
+    "check_bucketable",
     "grid_mask_host",
+    "halo_index_host",
+    "halo_index_names",
     "mask_input_name",
     "masked_spec",
     "pad_batch",
     "pad_grid",
+    "padded_request_shape",
     "with_shape",
     "BucketEntry",
     "BucketedDesign",

@@ -24,9 +24,10 @@ numpy) — with ``run(arrays)`` the validated synchronous composition.
 
 :func:`build_bucket_runner` wraps a runner compiled for a padded canonical
 **bucket** shape so it serves any grid that fits inside the bucket, with
-the real grid's exterior-zero boundary re-imposed in-kernel by a streamed
-mask input (see :mod:`repro.runtime.bucketing`); results are bit-identical
-to executing the same design unpadded.
+the real grid's boundary rule — zero, constant, replicate, or periodic —
+re-imposed from per-request streamed inputs (mask, halo-index maps, or
+host-streamed wrap margins; see :mod:`repro.runtime.bucketing`); results
+are bit-identical to executing the same design unpadded.
 """
 from __future__ import annotations
 
@@ -41,13 +42,7 @@ from repro.core.distribute import build_runner
 from repro.core.model import ParallelismConfig
 from repro.core.spec import StencilSpec
 from repro.kernels import ops
-from repro.runtime.bucketing import (
-    boundary_fill,
-    bucket_spec,
-    grid_mask_host,
-    mask_input_name,
-    pad_batch,
-)
+from repro.runtime.bucketing import bucket_plan
 
 
 class DegradedDesignWarning(RuntimeWarning):
@@ -242,34 +237,35 @@ def build_bucket_runner(
     strict: bool = False,
     inner=None,
 ):
-    """Pad-and-mask wrapper: a design compiled for ``bucket_shape`` serving
-    any grid ``<= bucket_shape`` with the spec's exact boundary semantics.
+    """Streamed-boundary wrapper: a design compiled for ``bucket_shape``
+    serving any fitting grid with the spec's exact boundary semantics.
 
-    The compiled artefact is a batched runner for the **masked bucket
-    spec** (:func:`repro.runtime.bucketing.bucket_spec`): inputs are
-    padded up to the bucket with the boundary fill and a mask input (1 on
-    the real grid, 0 on the padding) is woven into every stage (multiply
-    for a zero boundary, mask+offset for a constant one), so every fused
-    iteration re-imposes the real grid's boundary in-kernel.  Interior
-    results are bit-identical to executing the same design unpadded.
-    Replicate/periodic boundaries cannot be expressed this way and are
-    refused by the spec transform (see ``check_maskable``).
+    The compiled artefact is a batched runner for the **streamed bucket
+    spec** (:func:`repro.runtime.bucketing.bucket_spec`); the wrapper
+    stages each request through the bucket's host plan
+    (:class:`repro.runtime.bucketing.BucketPlan`): inputs are laid into
+    the bucket with the boundary-appropriate margin fill (zeros/constant,
+    clamped edge, or the wrapped periodic halo computed from the *real*
+    shape at pad time) alongside the per-request streamed service inputs
+    — the ``_mask`` woven into every stage and, for replicate, the
+    per-dimension halo-index maps the in-kernel per-stage gather
+    consumes.  Interior results are bit-identical to executing the same
+    design unpadded, for every boundary mode.
 
     ``run(arrays)`` takes one uniform-shape batch ``{name: (B,) + grid}``
-    with ``grid <= bucket_shape`` per dimension and returns ``(B,) +
-    grid``.  Serving layers that mix grid shapes inside one micro-batch
-    pre-pad each entry (``repro.runtime.bucketing.pad_grid`` /
-    ``grid_mask_host``) and drive ``run.stage`` / ``run.dispatch`` /
-    ``run.finalize`` directly, slicing each entry's region out of the
-    bucket-shaped output.
+    with ``grid + 2 * margins <= bucket_shape`` per dimension and returns
+    ``(B,) + grid``.  Serving layers that mix grid shapes inside one
+    micro-batch stage each entry through ``run.plan`` and drive
+    ``run.stage`` / ``run.dispatch`` / ``run.finalize`` directly, slicing
+    each entry's region out of the bucket-shaped output.
 
     Pass ``inner`` to wrap an already-compiled batched runner for the
-    masked bucket spec (the design-cache path) instead of compiling here.
+    streamed bucket spec (the design-cache path) instead of compiling
+    here.
     """
     bucket_shape = tuple(int(b) for b in bucket_shape)
-    mspec = bucket_spec(spec, bucket_shape)
-    mname = mask_input_name(spec)
-    fill = boundary_fill(spec)
+    plan = bucket_plan(spec, bucket_shape, iterations=iterations)
+    mspec = plan.mspec
     if inner is None:
         inner = build_batched_runner(
             mspec, cfg, iterations=iterations, devices=devices,
@@ -280,20 +276,21 @@ def build_bucket_runner(
     def run(arrays: Mapping[str, np.ndarray]) -> np.ndarray:
         B, grid = validate_batch(spec, arrays, exact=False)
         padded = {
-            n: pad_batch(np.asarray(arrays[n]), bucket_shape, fill)
+            n: plan.place_entry(np.asarray(arrays[n]), batched=True)
             for n in spec.inputs
         }
-        mask = grid_mask_host(grid, bucket_shape, mspec.inputs[mname][0])
-        padded[mname] = np.broadcast_to(
-            mask[None], (B,) + bucket_shape
-        )
+        for sname, svc in plan.service_entry(grid).items():
+            padded[sname] = np.broadcast_to(
+                svc[None], (B,) + bucket_shape
+            )
         out = inner(padded)
-        return out[(slice(None),) + tuple(slice(0, g) for g in grid)]
+        return out[(slice(None),) + plan.out_index(grid)]
 
     run.spec = spec
     run.masked_spec = mspec
-    run.mask_name = mname
+    run.mask_name = plan.mask_name
     run.bucket_shape = bucket_shape
+    run.plan = plan
     run.inner = inner
     run.cfg = inner.cfg
     run.iterations = inner.iterations

@@ -8,7 +8,7 @@ onto a small ladder of padded canonical **bucket** shapes, so a kernel
 registration owns at most a handful of compiled designs (one per bucket
 actually hit) instead of one per distinct request shape.
 
-Two pieces:
+Three pieces:
 
   * :class:`ShapeBucketer` — the bucket-ladder policy.  By default every
     dimension rounds up to the next power of two (floored at ``min_size``);
@@ -20,37 +20,72 @@ Two pieces:
     at the cost of more designs.  ``max_shape`` bounds the largest bucket
     so one oversized request cannot force a huge compile.
 
-  * the **pad-and-mask spec transform** — :func:`bucket_spec` rewrites a
-    stencil spec onto the bucket shape and threads a streamed ``_mask``
-    input (1.0 on the real grid, 0.0 on the padding) *multiplied into
-    every stage*.  Because every executor (Pallas kernel, jnp fused
-    fallback, all shard_map variants) evaluates stages through the same
-    expression tree, the mask re-imposes the real grid's exterior-zero
-    boundary at every stage of every fused iteration, in-kernel — this is
-    the halo-padded-block trick of combined spatial/temporal blocking
-    schemes, applied at the whole-grid level.  Interior cells compute
-    ``expr * 1.0``, so results are bit-identical to running the unpadded
-    grid; padding cells compute ``expr * 0.0 == 0.0``, exactly the zeros
-    an unpadded run reads from its exterior.  Kernels whose padding cells
-    could compute non-finite values (a division by streamed data: 0/0 or
-    x/0 would survive the mask multiply as NaN) are rejected at transform
-    time — see :func:`check_maskable`; serve those exact-shape.
+  * the **spec transforms** — :func:`bucket_spec` rewrites a stencil spec
+    onto the bucket shape and threads the streamed inputs its boundary
+    mode needs (see below); the compiled design is shape-agnostic within
+    its bucket, every per-request quantity arrives as data.
 
-    Boundary rules (docs/DESIGN.md §Boundary semantics): a ``constant v``
-    boundary is re-imposed in-kernel by the mask-plus-offset form
-    ``expr * m + v * (1 - m)`` with the bucket margin host-padded to
-    ``v``; ``replicate``/``periodic`` boundaries depend on per-request
-    edge positions and evolve every iteration, so they are refused at
-    registration — those kernels are served exact-shape instead.
+  * the **host staging plan** — :func:`bucket_plan` captures everything
+    the serving layers need to stage one request into a bucket design:
+    where the real grid sits inside the bucket, how the margin is filled,
+    which streamed service arrays (mask / halo indices) ride along, and
+    which output slice to return.
+
+Boundary rules (docs/DESIGN.md §Boundaries × bucketed serving) — every
+mode is bucketable, each by the streaming trick that fits its semantics:
+
+  ``zero``        streamed ``_mask`` input (1 on the real grid, 0 on the
+                  padding) multiplied into every stage: padding cells
+                  compute ``expr * 0.0 == 0.0``, exactly the zeros an
+                  unpadded run reads from its exterior.  Bit-identical.
+  ``constant v``  mask-plus-offset form ``expr * m + v * (1 - m)`` with
+                  the bucket margin host-padded to ``v``.  Bit-identical.
+  ``replicate``   ``_mask`` plus per-dimension streamed **halo-index**
+                  inputs: after every stage the shared trapezoid helper
+                  gathers each padding cell from its clamped nearest real
+                  edge cell (:func:`repro.kernels.blockops.streamed_halo_fixup`),
+                  re-creating the clamped exterior in-kernel from
+                  per-request data.  Bit-identical: real cells compute
+                  ``expr * 1.0`` over identical operand values.
+  ``periodic``    **halo-streamed data**: the host lays the wrapped
+                  extension of the real grid into a reserved margin of
+                  ``iterations * radius`` cells per side
+                  (:func:`bucket_margins`), computed from the real shape
+                  at pad time.  A stencil commutes with its own periodic
+                  extension, so the margin evolves as correct halo data;
+                  staleness creeps inward from the bucket edge at
+                  ``radius`` per iteration (the whole-run trapezoid
+                  argument) and never reaches the real region.  The
+                  compiled design is a plain zero-boundary bucket
+                  iteration — no wrap machinery, no mask — and the real
+                  region is bit-identical to unpadded execution.  Cost:
+                  the bucket must fit ``shape + 2 * iterations * radius``
+                  per dim, so long-running periodic kernels pay a wide
+                  margin (ROADMAP notes the per-round re-wrap
+                  optimization that would shrink it to ``s * radius``).
+
+Kernels whose padding cells could compute non-finite values (a division
+by streamed data: 0/0 or x/0 would survive the mask multiply as NaN) are
+rejected at transform time — see :func:`check_bucketable`; serve those
+exact-shape.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Sequence
 
 import numpy as np
 
-from repro.core.spec import BinOp, Num, Ref, StencilSpec, refs_in, walk
+from repro.core.spec import (
+    BinOp,
+    Num,
+    Ref,
+    StencilSpec,
+    ZERO_BOUNDARY,
+    refs_in,
+    walk,
+)
 
 
 def next_pow2(n: int) -> int:
@@ -128,7 +163,7 @@ class ShapeBucketer:
 
 
 # --------------------------------------------------------------------------
-# Spec transforms: re-shape + in-kernel exterior-zero mask
+# Spec transforms: re-shape + streamed boundary inputs
 # --------------------------------------------------------------------------
 
 
@@ -143,43 +178,40 @@ def with_shape(spec: StencilSpec, shape: Sequence[int]) -> StencilSpec:
     return dataclasses.replace(spec, inputs=inputs)
 
 
-def mask_input_name(spec: StencilSpec) -> str:
-    """Collision-free name for the streamed mask input of ``spec``."""
-    taken = set(spec.inputs) | {s.name for s in spec.stages}
-    name = "_mask"
-    while name in taken:
+def _fresh_name(spec: StencilSpec, base: str, taken=()) -> str:
+    """Collision-free streamed-input name for ``spec``."""
+    used = set(spec.inputs) | {s.name for s in spec.stages} | set(taken)
+    name = base
+    while name in used:
         name += "_"
     return name
 
 
-def check_maskable(spec: StencilSpec) -> None:
-    """Reject specs the streamed-mask trick cannot serve bit-exactly.
+def mask_input_name(spec: StencilSpec) -> str:
+    """Collision-free name for the streamed mask input of ``spec``."""
+    return _fresh_name(spec, "_mask")
 
-    Masking relies on ``x * 0.0 == 0.0``, which fails for ``x`` = inf/NaN.
-    Padding cells hold zeros, so a stage that *divides by streamed data*
-    (any array reference in a denominator) can produce 0/0 or x/0 on the
-    padding; the resulting NaN survives the mask multiply and bleeds into
-    the real grid on the next iteration.  Such kernels must be served
-    exact-shape (division by constants — every kernel in the benchmark
-    suite — is fine).
 
-    Boundary rules: ``zero`` and ``constant`` boundaries are re-imposed
-    in-kernel (mask multiply, respectively mask + offset — see
-    :func:`masked_spec`).  ``replicate``/``periodic`` exteriors depend on
-    per-request edge *positions* inside the shared bucket design, which a
-    streamed 0/1 mask cannot express: the boundary values themselves
-    evolve every iteration, so a host-side pad into the bucket margin
-    diverges after the first iteration.  Those specs are refused at
-    registration time — wrong edges are never served silently.
+def halo_index_names(spec: StencilSpec) -> tuple[str, ...]:
+    """Collision-free per-dimension streamed halo-index input names."""
+    names: list[str] = []
+    for d in range(spec.ndim):
+        names.append(_fresh_name(spec, f"_bidx{d}", taken=names))
+    return tuple(names)
+
+
+def check_bucketable(spec: StencilSpec) -> None:
+    """Reject specs the streamed bucket transforms cannot serve bit-exactly.
+
+    Bucket padding relies on ``x * 0.0 == 0.0`` (mask modes) and on
+    finite don't-care cells (halo modes), both of which fail for
+    ``x`` = inf/NaN.  Padding cells can hold zeros, so a stage that
+    *divides by streamed data* (any array reference in a denominator) can
+    produce 0/0 or x/0 on the padding; the resulting NaN survives the
+    mask multiply and bleeds into the real grid on the next iteration.
+    Such kernels must be served exact-shape (division by constants —
+    every kernel in the benchmark suite — is fine).
     """
-    if spec.boundary.kind in ("replicate", "periodic"):
-        raise ValueError(
-            f"spec {spec.name!r} declares a {spec.boundary.kind!r} "
-            "boundary: the streamed bucket mask can only re-impose "
-            "zero/constant exteriors in-kernel, so this kernel cannot be "
-            "shape-bucketed — serve it exact-shape instead (register "
-            "without bucketing)"
-        )
     for stage in spec.stages:
         for node in walk(stage.expr):
             if isinstance(node, BinOp) and node.op == "/":
@@ -200,20 +232,69 @@ def boundary_fill(spec: StencilSpec) -> float:
     return spec.boundary.value if spec.boundary.kind == "constant" else 0.0
 
 
-def masked_spec(spec: StencilSpec) -> StencilSpec:
-    """Add a constant (non-iterated) mask input woven into every stage.
+def bucket_margins(
+    spec: StencilSpec, iterations: int | None = None
+) -> tuple[int, ...]:
+    """Per-dimension margin a bucket reserves on *each* side of the grid.
 
-    With the mask 1.0 on a subregion and 0.0 elsewhere, every stage's
-    writeback outside the subregion is re-imposed to the spec's boundary
-    value at every iteration in every executor — ``expr * m`` for a zero
-    boundary, ``expr * m + v * (1 - m)`` for a constant-``v`` boundary —
-    which reproduces the subregion's boundary rule exactly (local stages
-    included: their padded-region values are re-imposed before any
-    consumer reads them at an offset).  Raises for kernels the mask trick
-    cannot serve (replicate/periodic boundaries, division by streamed
-    data — see :func:`check_maskable`).
+    Only ``periodic`` needs one: the wrapped extension is streamed in as
+    data and goes stale from the bucket edge inward at ``spec.radius``
+    per iteration, so the margin must cover the whole run
+    (``iterations * radius``).  All other modes re-impose their exterior
+    in-kernel every stage and place the grid at the bucket origin.
     """
-    check_maskable(spec)
+    if spec.boundary.kind != "periodic":
+        return (0,) * spec.ndim
+    it = spec.iterations if iterations is None else iterations
+    return (max(int(it), 1) * spec.radius,) * spec.ndim
+
+
+def padded_request_shape(
+    spec: StencilSpec, shape: Sequence[int], iterations: int | None = None
+) -> tuple[int, ...]:
+    """The shape bucket routing must fit: grid plus both halo margins."""
+    shape = tuple(int(s) for s in shape)
+    if len(shape) != spec.ndim:
+        raise ValueError(
+            f"spec {spec.name!r} is {spec.ndim}-D, got shape {shape}"
+        )
+    margins = bucket_margins(spec, iterations)
+    return tuple(s + 2 * m for s, m in zip(shape, margins))
+
+
+def masked_spec(spec: StencilSpec) -> StencilSpec:
+    """The streamed-boundary spec a bucket design is compiled from.
+
+    ``zero``/``constant`` weave a constant (non-iterated) ``_mask`` input
+    into every stage — ``expr * m`` for zero, ``expr * m + v * (1 - m)``
+    for constant-``v`` — so every executor re-imposes the real grid's
+    exterior at every stage of every fused iteration, in-kernel.
+
+    ``replicate`` additionally threads per-dimension int32 halo-index
+    inputs and records them in ``halo_index_inputs``: the shared
+    trapezoid helper gathers every padding cell from its clamped nearest
+    real edge cell after each stage, *then* the bucket-level replicate
+    rule clamps out-of-bucket reads to the (freshly re-imposed) belt —
+    so leading edges (always real) and trailing edges both see the
+    clamped exterior of the real grid.
+
+    ``periodic`` threads nothing: the design is the plain zero-boundary
+    iteration of the bucket grid, and the wrapped exterior arrives as
+    host-streamed margin data (see :func:`bucket_margins`).  Masking
+    would zero the evolving halo, so the real region is recovered by
+    output slicing instead.
+
+    Raises for kernels no bucket transform can serve (division by
+    streamed data — see :func:`check_bucketable`).
+    """
+    check_bucketable(spec)
+    kind = spec.boundary.kind
+    if kind == "periodic":
+        out = dataclasses.replace(
+            spec, name=spec.name + "@halo", boundary=ZERO_BOUNDARY
+        )
+        out.validate()
+        return out
     mname = mask_input_name(spec)
     mref = Ref(mname, (0,) * spec.ndim)
     fill = boundary_fill(spec)
@@ -233,24 +314,30 @@ def masked_spec(spec: StencilSpec) -> StencilSpec:
     )
     inputs = dict(spec.inputs)
     inputs[mname] = (spec.dtype, spec.shape)
+    halo_idx: tuple[str, ...] = ()
+    if kind == "replicate":
+        halo_idx = halo_index_names(spec)
+        for n in halo_idx:
+            inputs[n] = ("int32", spec.shape)
     out = dataclasses.replace(
-        spec, name=spec.name + "@masked", inputs=inputs, stages=stages
+        spec, name=spec.name + "@masked", inputs=inputs, stages=stages,
+        halo_index_inputs=halo_idx,
     )
     out.validate()
     return out
 
 
 def bucket_spec(spec: StencilSpec, bucket_shape: Sequence[int]) -> StencilSpec:
-    """The masked bucket-shaped spec a bucket design is compiled from.
+    """The streamed bucket-shaped spec a bucket design is compiled from.
 
-    Per-request fit (grid <= bucket) is validated by the bucket runner;
-    the spec's own declared shape only contributes structure here.
+    Per-request fit (grid + margins <= bucket) is validated by the bucket
+    runner; the spec's own declared shape only contributes structure here.
     """
     return masked_spec(with_shape(spec, bucket_shape))
 
 
 # --------------------------------------------------------------------------
-# Host-side pad / mask helpers (numpy: used while staging micro-batches)
+# Host-side staging plan (numpy: used while staging micro-batches)
 # --------------------------------------------------------------------------
 
 
@@ -266,6 +353,23 @@ def grid_mask_host(
     m = np.zeros(bucket_shape, dtype=np.dtype(dtype))
     m[tuple(slice(0, s) for s in shape)] = 1
     return m
+
+
+def halo_index_host(
+    shape: Sequence[int], bucket_shape: Sequence[int], dim: int
+) -> np.ndarray:
+    """Bucket-shaped int32 gather-source map for dimension ``dim``.
+
+    Cell value = the global bucket coordinate (along ``dim``) the cell
+    copies from under the clamped-edge rule: identity below ``shape[dim]``,
+    the last real coordinate beyond it.
+    """
+    shape, bucket_shape = tuple(shape), tuple(bucket_shape)
+    idx = np.clip(np.arange(bucket_shape[dim]), 0, shape[dim] - 1)
+    view = idx.reshape(
+        tuple(-1 if d == dim else 1 for d in range(len(bucket_shape)))
+    )
+    return np.broadcast_to(view, bucket_shape).astype(np.int32)
 
 
 def pad_grid(
@@ -312,4 +416,153 @@ def pad_batch(
         a,
         [(0, 0)] + [(0, b - s) for s, b in zip(a.shape[1:], bucket_shape)],
         constant_values=fill,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Everything the host needs to stage requests into one bucket design.
+
+    Built once per (spec, bucket, iterations) by :func:`bucket_plan`;
+    shared by :func:`repro.runtime.batching.build_bucket_runner` (uniform
+    batches) and the server's micro-batch staging (mixed shapes sharing a
+    bucket, each entry carrying its own streamed service arrays).
+    """
+
+    spec: StencilSpec                 # the request-facing spec
+    bucket: tuple[int, ...]
+    mspec: StencilSpec                # the compiled-design (streamed) spec
+    margins: tuple[int, ...]          # leading placement offset per dim
+    mask_name: str | None             # None for periodic (no mask woven)
+    halo_idx_names: tuple[str, ...]   # per-dim index inputs (replicate)
+
+    @property
+    def fill(self) -> float:
+        return boundary_fill(self.spec)
+
+    @property
+    def service_names(self) -> tuple[str, ...]:
+        """The streamed non-data inputs of the bucket design, in order."""
+        names = () if self.mask_name is None else (self.mask_name,)
+        return names + self.halo_idx_names
+
+    def validate_shape(self, shape: Sequence[int]) -> tuple[int, ...]:
+        """Check a request grid (plus its halo margins) fits the bucket."""
+        shape = tuple(int(s) for s in shape)
+        if len(shape) != len(self.bucket) or any(
+            s + 2 * m > b
+            for s, m, b in zip(shape, self.margins, self.bucket)
+        ):
+            need = tuple(
+                s + 2 * m for s, m in zip(shape, self.margins)
+            ) if len(shape) == len(self.bucket) else shape
+            raise ValueError(
+                f"grid shaped {shape} (with halo margins: {need}) does "
+                f"not fit bucket {self.bucket}"
+            )
+        return shape
+
+    def out_index(self, shape: Sequence[int]) -> tuple[slice, ...]:
+        """Slice of the bucket output holding the real grid's results."""
+        return tuple(
+            slice(m, m + s) for m, s in zip(self.margins, shape)
+        )
+
+    def place_entry(self, a: np.ndarray, batched: bool = False) -> np.ndarray:
+        """Lay one grid (or ``(B,) + grid``) into the bucket shape.
+
+        zero/constant fill the trailing margin with the boundary value;
+        replicate extends the clamped edge (the correct exterior at t=0);
+        periodic streams the wrapped extension into both margins — the
+        per-request halo data the compiled design consumes.
+        """
+        a = np.asarray(a)
+        off = 1 if batched else 0
+        if a.ndim != len(self.bucket) + off:
+            raise ValueError(
+                f"array shaped {a.shape} does not fit "
+                f"{'(B,) + ' if batched else ''}{self.bucket}"
+            )
+        self.validate_shape(a.shape[off:])
+        kind = self.spec.boundary.kind
+        if kind in ("zero", "constant"):
+            pads = [(0, 0)] * off + [
+                (0, b - s) for s, b in zip(a.shape[off:], self.bucket)
+            ]
+            if tuple(a.shape[off:]) == self.bucket:
+                return a
+            return np.pad(a, pads, constant_values=self.fill)
+        for d, b in enumerate(self.bucket):
+            s = a.shape[d + off]
+            if s == b:
+                continue
+            if kind == "replicate":
+                idx = np.clip(np.arange(b), 0, s - 1)
+            else:  # periodic: wrapped extension around the placed grid
+                idx = (np.arange(b) - self.margins[d]) % s
+            a = np.take(a, idx, axis=d + off)
+        return a
+
+    def service_entry(self, shape: Sequence[int]) -> dict[str, np.ndarray]:
+        """The streamed service arrays (mask / halo indices) for one grid.
+
+        Pure functions of ``(plan, shape)``, so they are memoized: a
+        serving trace replaying the same few shapes thousands of times
+        must not rebuild bucket-sized masks and index maps per request.
+        Callers stack or broadcast the returned arrays — never mutate
+        them in place.
+        """
+        return _service_entry_cached(self, self.validate_shape(shape))
+
+    def service_filler(self) -> dict[str, np.ndarray]:
+        """Service arrays for throwaway batch-padding entries.
+
+        An all-zero mask makes a padding entry's output the boundary
+        constant everywhere (discarded by the caller); zero halo indices
+        gather every cell from the bucket origin — finite, discarded.
+        """
+        out: dict[str, np.ndarray] = {}
+        if self.mask_name is not None:
+            dt = self.mspec.inputs[self.mask_name][0]
+            out[self.mask_name] = np.zeros(self.bucket, np.dtype(dt))
+        for name in self.halo_idx_names:
+            out[name] = np.zeros(self.bucket, np.int32)
+        return out
+
+    def filler_entry(self, name: str) -> np.ndarray:
+        """A throwaway data grid for batch padding (boundary fill value)."""
+        dt = self.spec.inputs[name][0]
+        return np.full(self.bucket, self.fill, np.dtype(dt))
+
+
+@functools.lru_cache(maxsize=512)
+def _service_entry_cached(
+    plan: BucketPlan, shape: tuple[int, ...]
+) -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    if plan.mask_name is not None:
+        out[plan.mask_name] = grid_mask_host(
+            shape, plan.bucket, plan.mspec.inputs[plan.mask_name][0]
+        )
+    for d, name in enumerate(plan.halo_idx_names):
+        out[name] = halo_index_host(shape, plan.bucket, d)
+    return out
+
+
+def bucket_plan(
+    spec: StencilSpec,
+    bucket_shape: Sequence[int],
+    iterations: int | None = None,
+) -> BucketPlan:
+    """Build the host staging plan for ``spec`` served from ``bucket_shape``."""
+    bucket = tuple(int(b) for b in bucket_shape)
+    mspec = bucket_spec(spec, bucket)
+    kind = spec.boundary.kind
+    return BucketPlan(
+        spec=spec,
+        bucket=bucket,
+        mspec=mspec,
+        margins=bucket_margins(spec, iterations),
+        mask_name=None if kind == "periodic" else mask_input_name(spec),
+        halo_idx_names=mspec.halo_index_inputs,
     )

@@ -46,7 +46,12 @@ from repro.runtime.batching import (
     degraded_message,
     is_degraded,
 )
-from repro.runtime.bucketing import ShapeBucketer, bucket_spec, check_maskable
+from repro.runtime.bucketing import (
+    ShapeBucketer,
+    bucket_spec,
+    check_bucketable,
+    padded_request_shape,
+)
 
 
 def structural_fingerprint(spec: StencilSpec) -> str:
@@ -65,6 +70,7 @@ def structural_fingerprint(spec: StencilSpec) -> str:
         spec.stages,
         spec.iterate_input,
         spec.boundary,
+        spec.halo_index_inputs,
     ))
     return hashlib.sha1(payload.encode()).hexdigest()[:16]
 
@@ -117,11 +123,31 @@ class CachedDesign:
 
 
 class DesignCache:
-    """In-process memoization of rankings and compiled runners."""
+    """In-process memoization of rankings and compiled runners.
 
-    def __init__(self):
+    ``max_designs`` caps the number of *compiled runners* the cache
+    memoizes (the expensive artefacts — rankings are cheap and uncapped):
+    every runner hit marks its entry most-recently-used, and an insert
+    past the cap evicts the least-recently-hit runner
+    (``runner_evictions`` counts them; per-key hit/miss stats survive, so
+    an evict-then-rehit shows up as a rebuild miss on the same key).
+    This is the cache-level capacity management that used to be a ROADMAP
+    item: bucket-ladder eviction (``max_buckets``) only drops a
+    registration's reference, while this bounds the shared memoization
+    itself.
+    """
+
+    def __init__(self, max_designs: int | None = None):
+        if max_designs is not None and max_designs < 1:
+            raise ValueError(
+                f"max_designs must be >= 1, got {max_designs}"
+            )
+        self.max_designs = max_designs
+        self.runner_evictions = 0
         self._designs: dict[tuple, TunedDesign] = {}
-        self._runners: dict[tuple, tuple[object, float]] = {}
+        self._runners: "collections.OrderedDict[tuple, tuple[object, float]]" = (
+            collections.OrderedDict()
+        )
         self._failed: dict[tuple, str] = {}    # infeasible-config memo
         self._stats: dict[tuple, KeyStats] = {}
 
@@ -201,6 +227,7 @@ class DesignCache:
         st = self._stats.setdefault(key, KeyStats())
         if key in self._runners:
             st.hits += 1
+            self._runners.move_to_end(key)      # most recently hit
             return self._runners[key][0]
         if key in self._failed:
             # known-infeasible: re-raising from the memo is a cache hit,
@@ -227,6 +254,10 @@ class DesignCache:
         dt = time.perf_counter() - t0
         st.build_time_s += dt
         self._runners[key] = (run, dt)
+        if self.max_designs is not None:
+            while len(self._runners) > self.max_designs:
+                self._runners.popitem(last=False)   # least recently hit
+                self.runner_evictions += 1
         return run
 
     # ------------------------------------------------------------------
@@ -317,14 +348,16 @@ class DesignCache:
         ``max_buckets`` caps the ladder with an LRU policy: when a new
         bucket would exceed the cap, the least-recently-hit bucket design
         is evicted (its counters survive and resume if the bucket is ever
-        re-registered).  Specs whose boundary rule cannot be re-imposed
-        in-kernel by the streamed mask (replicate/periodic, or division by
-        streamed data) are refused here, at registration time — never
-        served with wrong edges (see
-        :func:`repro.runtime.bucketing.check_maskable`).
+        re-registered).  Every boundary mode is accepted — zero/constant
+        via the streamed mask, replicate via streamed halo-index gathers,
+        periodic via host-streamed wrap margins (docs/DESIGN.md
+        §Boundaries × bucketed serving); only kernels no streamed bucket
+        transform can serve bit-exactly (division by streamed data) are
+        refused here, at registration time (see
+        :func:`repro.runtime.bucketing.check_bucketable`).
         """
         spec = _as_spec(source_or_spec)
-        check_maskable(spec)   # refuse un-bucketable kernels loudly, now
+        check_bucketable(spec)   # refuse un-bucketable kernels loudly, now
         return BucketedDesign(
             cache=self,
             spec=spec,
@@ -365,6 +398,7 @@ class DesignCache:
         self._runners.clear()
         self._failed.clear()
         self._stats.clear()
+        self.runner_evictions = 0
 
 
 # --------------------------------------------------------------------------
@@ -403,12 +437,13 @@ class BucketEntry:
 class BucketedDesign:
     """One logical kernel registration owning a ladder of bucket designs.
 
-    ``runner_for(shape)`` maps a grid shape to its bucket (via the
-    :class:`ShapeBucketer` policy), auto-tunes and compiles that bucket's
-    masked design on first use (both levels memoized in the shared
-    :class:`DesignCache`), and returns the :class:`BucketEntry` whose
-    pad-and-mask runner serves the shape.  Per-bucket hit counters live in
-    ``BucketEntry.stats`` / :meth:`stats`.
+    ``runner_for(shape)`` maps a grid shape (plus its streamed-halo
+    margins) to its bucket via the :class:`ShapeBucketer` policy,
+    auto-tunes and compiles that bucket's streamed-boundary design on
+    first use (both levels memoized in the shared :class:`DesignCache`),
+    and returns the :class:`BucketEntry` whose staging runner serves the
+    shape.  Per-bucket hit counters live in ``BucketEntry.stats`` /
+    :meth:`stats`.
 
     ``max_buckets`` bounds the ladder of a long-lived registration (the
     ROADMAP's bucket-eviction item): every ``runner_for`` marks its bucket
@@ -416,9 +451,11 @@ class BucketedDesign:
     least-recently-hit entry.  An evicted bucket's counters are archived
     and resume when the bucket is rebuilt, so serving statistics survive
     eviction/re-registration cycles.  Eviction drops this registration's
-    reference to the compiled design; the shared :class:`DesignCache`
-    still memoizes it, so a rebuild is a dictionary lookup (cache-level
-    capacity management stays a ROADMAP item).
+    reference to the compiled design; while the shared
+    :class:`DesignCache` still memoizes it a rebuild is a dictionary
+    lookup, but under ``DesignCache(max_designs=)`` the runner itself
+    may have been LRU-evicted, in which case the rebuild re-jits from
+    the still-cached ranking.
     """
 
     def __init__(
@@ -450,12 +487,31 @@ class BucketedDesign:
         self.evictions: int = 0
 
     def bucket_for(self, shape: Sequence[int]) -> tuple[int, ...]:
-        return self.bucketer.bucket_for(shape)
+        """The bucket serving a *request* grid of ``shape``.
+
+        Routing fits the grid plus its per-dimension halo margins
+        (non-zero only for periodic specs, whose wrapped exterior is
+        streamed into the margin as data — see
+        :func:`repro.runtime.bucketing.bucket_margins`).
+        """
+        return self.bucketer.bucket_for(
+            padded_request_shape(self.spec, shape, self.iterations)
+        )
 
     def runner_for(self, shape: Sequence[int], count: int = 1) -> BucketEntry:
-        """The bucket entry serving ``shape`` (built and memoized on first
-        use); ``count`` grids are attributed to the bucket's counters."""
-        bucket = self.bucket_for(shape)
+        """The bucket entry serving request grids of ``shape`` (built and
+        memoized on first use); ``count`` grids are attributed to the
+        bucket's counters."""
+        return self.entry_for_bucket(self.bucket_for(shape), count=count)
+
+    def entry_for_bucket(
+        self, bucket: tuple[int, ...], count: int = 1
+    ) -> BucketEntry:
+        """The entry for an already-routed bucket shape (what the server's
+        flush loop calls after grouping requests per bucket; routing a
+        bucket shape through :meth:`bucket_for` again would re-add halo
+        margins)."""
+        bucket = tuple(int(b) for b in bucket)
         entry = self._entries.get(bucket)
         if entry is not None:
             entry.stats.hits += 1

@@ -16,13 +16,15 @@ text or :class:`StencilSpec`) and then submit grids.  The serving flow is
 
 **Shape bucketing** (``bucketing=True`` or a
 :class:`repro.runtime.ShapeBucketer`): a registered design is a *logical*
-kernel that serves any grid shape its bucketer accepts.  Each request is
-routed to a padded canonical bucket; one masked design per bucket is
-auto-tuned and compiled on first use (all memoized in the shared cache),
-and grids of different sizes sharing a bucket ride the same micro-batch,
-each carrying its own exterior-zero mask.  Without bucketing, requests
-must match the registered spec's exact shape (the pre-bucketing
-contract).
+kernel that serves any grid shape its bucketer accepts, under **any**
+boundary mode.  Each request is routed to a padded canonical bucket; one
+streamed-boundary design per bucket is auto-tuned and compiled on first
+use (all memoized in the shared cache), and grids of different sizes
+sharing a bucket ride the same micro-batch, each carrying its own
+streamed service inputs — the exterior mask, replicate halo-index maps,
+or host-streamed periodic wrap margins (docs/DESIGN.md §Boundaries ×
+bucketed serving).  Without bucketing, requests must match the
+registered spec's exact shape (the pre-bucketing contract).
 
 **Async double-buffered dispatch** (``async_dispatch=True``, the
 default): each micro-batch is staged (host stack/pad + ``jax.device_put``)
@@ -36,8 +38,8 @@ debugging/benchmark baselines; results are identical either way.
 **Batch-axis semantics** (shared with :mod:`repro.runtime.batching`): one
 dispatch evaluates ``(B,) + bucket_shape`` arrays where the B grids are
 fully independent — no halo exchange, reduction, or any other coupling
-crosses the batch axis, and the exterior-zero boundary applies per grid
-(per *real* grid under bucketing, via the streamed mask).  Requests for
+crosses the batch axis, and the spec's boundary rule applies per grid
+(per *real* grid under bucketing, via the streamed inputs).  Requests for
 different designs never share a batch.  Short final chunks are padded up
 to the compiled batch size (so a design compiles exactly one batched
 program) and the padding's outputs are discarded.
@@ -66,12 +68,7 @@ import numpy as np
 
 # backward-compatible re-exports (pre-runtime engine.py held the LM engine)
 from repro.serve.lm import Request, ServeEngine  # noqa: F401
-from repro.runtime.bucketing import (
-    ShapeBucketer,
-    boundary_fill,
-    grid_mask_host,
-    pad_grid,
-)
+from repro.runtime.bucketing import ShapeBucketer
 from repro.runtime.cache import (
     BucketedDesign,
     DesignCache,
@@ -484,30 +481,31 @@ class StencilServer:
 
             return runner, stacked, post, pad
 
-        entry = reg.cached.runner_for(bucket, count=n)
+        entry = reg.cached.entry_for_bucket(bucket, count=n)
         runner = entry.runner
-        mname = runner.mask_name
-        mdtype = runner.masked_spec.inputs[mname][0]
-        fill = boundary_fill(spec)
+        plan = runner.plan
         stacked = {}
         for name in spec.inputs:
             grids = [
-                pad_grid(np.asarray(req.arrays[name]), bucket, fill)
+                plan.place_entry(np.asarray(req.arrays[name]))
                 for _, req, _ in chunk
             ]
-            grids += [np.full(bucket, fill, grids[0].dtype)] * pad
+            grids += [plan.filler_entry(name)] * pad
             stacked[name] = np.stack(grids)
-        # per-entry masks: grids of different shapes share the batch, and
-        # batch-padding entries carry an all-zero mask (their outputs —
-        # zeros, or the boundary constant under mask+offset — are
-        # discarded by post())
-        masks = [grid_mask_host(shape, bucket, mdtype) for _, _, shape in chunk]
-        masks += [np.zeros(bucket, np.dtype(mdtype))] * pad
-        stacked[mname] = np.stack(masks)
+        # per-entry streamed service arrays (mask and/or halo-index maps):
+        # grids of different shapes share the batch, each re-imposing its
+        # own real boundary in-kernel; batch-padding entries carry the
+        # plan's throwaway filler (their outputs are discarded by post())
+        service = [plan.service_entry(shape) for _, _, shape in chunk]
+        filler = plan.service_filler()
+        for sname in plan.service_names:
+            stacked[sname] = np.stack(
+                [e[sname] for e in service] + [filler[sname]] * pad
+            )
 
         def post(out):
             return {
-                t: out[i][tuple(slice(0, d) for d in shape)]
+                t: out[i][plan.out_index(shape)]
                 for i, (t, _, shape) in enumerate(chunk)
             }
 
@@ -558,5 +556,6 @@ class StencilServer:
             "hits": self.cache.hits,
             "misses": self.cache.misses,
             "entries": len(self.cache),
+            "runner_evictions": self.cache.runner_evictions,
         }
         return out

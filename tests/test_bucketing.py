@@ -302,7 +302,7 @@ def test_autotune_bucket_requires_cache():
 
 
 # ---------------------------------------------------------------------------
-# non-zero boundaries x bucketing: exact or refused, never silently wrong
+# non-zero boundaries x bucketing: every mode exact, never silently wrong
 # ---------------------------------------------------------------------------
 
 
@@ -404,42 +404,209 @@ output float: o(0,0) = a(0,0)
 """)
 
 
+def _route(spec, shape, iters):
+    from repro.runtime import padded_request_shape
+
+    return ShapeBucketer().bucket_for(padded_request_shape(spec, shape, iters))
+
+
 @pytest.mark.parametrize("kind", ["replicate", "periodic"])
-def test_replicate_periodic_refused_at_registration(kind):
-    """Un-maskable boundaries are refused loudly — at the spec transform,
-    the cache registration, and the server registration — with an error
-    pointing at exact-shape serving."""
+def test_replicate_periodic_bucket_matches_ref(kind):
+    """The halo-streamed bucket transforms: replicate re-imposes the
+    clamped exterior per stage from streamed index maps; periodic streams
+    the wrapped extension into the reserved halo margin.  Both must match
+    the oracle for grids strictly inside their bucket."""
     from repro.core.spec import Boundary
-    from repro.serve import StencilServer
 
+    iters = 4
     spec = _with_boundary(
-        stencils.jacobi2d(shape=(16, 8), iterations=2), Boundary(kind)
+        stencils.get("jacobi2d", shape=(20, 13), iterations=iters),
+        Boundary(kind),
     )
-    with pytest.raises(ValueError, match="serve it exact-shape"):
-        masked_spec(spec)
-    with pytest.raises(ValueError, match="cannot be shape-bucketed"):
-        DesignCache().bucketed(spec)
-    srv = StencilServer(cache=DesignCache(), bucketing=True, max_batch=2)
-    with pytest.raises(ValueError, match="serve it exact-shape"):
-        srv.register("k", spec)
-    # ... while exact-shape (unbucketed) serving works fine
-    srv2 = StencilServer(cache=DesignCache(), max_batch=2, tile_rows=8)
-    srv2.register("k", spec)
-    from repro.serve import StencilRequest
+    cfg = ParallelismConfig("temporal", k=1, s=2)
+    bucket = _route(spec, (20, 13), iters)
+    run = build_bucket_runner(spec, bucket, cfg, tile_rows=8)
+    arrays = batch_for(spec, B=2)
+    out = run(arrays)
+    assert out.shape == (2, 20, 13)
+    for b in range(2):
+        np.testing.assert_allclose(
+            out[b], oracle(spec, arrays, iters, b), rtol=2e-4, atol=2e-4,
+        )
 
-    x = RNG.standard_normal((16, 8)).astype(np.float32)
-    got = srv2.serve([StencilRequest("k", {"in_1": x})])[0]
-    want = np.asarray(
-        ref.stencil_iterations_ref(spec, {"in_1": jnp.asarray(x)}, 2)
+
+@pytest.mark.parametrize("kind", ["replicate", "periodic"])
+@pytest.mark.parametrize("name,shape", [
+    ("hotspot", (20, 13)),          # two inputs, one iterated
+    ("blur_jacobi2d", (20, 13)),    # local stage (fused loops)
+    ("heat3d", (12, 6, 5)),         # 3-D
+])
+def test_replicate_periodic_bucket_hard_specs(kind, name, shape):
+    from repro.core.spec import Boundary
+
+    iters = 3
+    spec = _with_boundary(
+        stencils.get(name, shape=shape, iterations=iters), Boundary(kind)
     )
-    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+    cfg = ParallelismConfig("temporal", k=1, s=3)
+    run = build_bucket_runner(spec, _route(spec, shape, iters), cfg,
+                              tile_rows=8)
+    arrays = batch_for(spec, B=2)
+    out = run(arrays)
+    assert out.shape == (2,) + shape
+    for b in range(2):
+        np.testing.assert_allclose(
+            out[b], oracle(spec, arrays, iters, b), rtol=2e-4, atol=2e-4,
+        )
 
 
-def test_new_boundary_stock_kernels_not_bucketable():
-    for name in ["heat3d_periodic", "blur_replicate"]:
-        with pytest.raises(ValueError, match="exact-shape"):
-            DesignCache().bucketed(stencils.get(name, shape=(16, 8, 8)
-                                   if name.startswith("heat") else (16, 8)))
+@pytest.mark.parametrize("kind", ["replicate", "periodic"])
+def test_replicate_periodic_bucket_bit_identical_across_rungs(kind):
+    """Widening the bucket must not perturb a single bit: the minimal-fit
+    run of the streamed design equals every larger rung's run."""
+    from repro.core.spec import Boundary
+    from repro.runtime import padded_request_shape
+
+    iters = 4
+    spec = _with_boundary(
+        stencils.get("jacobi2d", shape=(20, 13), iterations=iters),
+        Boundary(kind),
+    )
+    cfg = ParallelismConfig("temporal", k=1, s=2)
+    arrays = batch_for(spec, B=2)
+    minimal = padded_request_shape(spec, (20, 13), iters)
+    base = build_bucket_runner(spec, minimal, cfg, tile_rows=8)(arrays)
+    for bucket in [ShapeBucketer().bucket_for(minimal), (64, 64)]:
+        got = build_bucket_runner(spec, bucket, cfg, tile_rows=8)(arrays)
+        np.testing.assert_array_equal(got, base, err_msg=str(bucket))
+
+
+def test_replicate_bucket_exact_fit_and_pallas_backend():
+    """Replicate needs no margin: bucket == grid works (belt width 0,
+    bucket-level clamp == real clamp), and the streamed gather fixup runs
+    inside the Pallas kernel body (interpret mode)."""
+    from repro.core.spec import Boundary
+
+    iters = 4
+    spec = _with_boundary(
+        stencils.get("jacobi2d", shape=(16, 8), iterations=iters),
+        Boundary("replicate"),
+    )
+    cfg = ParallelismConfig("temporal", k=1, s=2)
+    arrays = batch_for(spec, B=2)
+    exact = build_bucket_runner(spec, (16, 8), cfg, tile_rows=8)(arrays)
+    for b in range(2):
+        np.testing.assert_allclose(
+            exact[b], oracle(spec, arrays, iters, b), rtol=2e-4, atol=2e-4,
+        )
+    pall = build_bucket_runner(
+        spec, (32, 16), cfg, tile_rows=8, backend="pallas", interpret=True,
+    )(arrays)
+    for b in range(2):
+        np.testing.assert_allclose(
+            pall[b], oracle(spec, arrays, iters, b), rtol=2e-4, atol=2e-4,
+        )
+
+
+@pytest.mark.parametrize("kind", ["replicate", "periodic"])
+def test_replicate_periodic_bucketed_through_server(kind):
+    """The full serving path — registration accepted, ragged shapes
+    sharing bucket rungs, short-chunk batch padding, per-entry streamed
+    service inputs — must keep replicate/periodic edges exact."""
+    from repro.core.spec import Boundary
+    from repro.serve import StencilRequest, StencilServer
+
+    iters = 3
+    base = _with_boundary(
+        stencils.get("jacobi2d", shape=(20, 13), iterations=iters),
+        Boundary(kind),
+    )
+    srv = StencilServer(
+        cache=DesignCache(), max_batch=4, bucketing=True, tile_rows=8,
+    )
+    srv.register("jac", base, iterations=iters)
+    shapes = [(20, 13), (18, 10), (40, 40), (25, 9), (19, 12)]
+    reqs = [
+        StencilRequest("jac", {
+            "in_1": RNG.standard_normal(s).astype(np.float32)
+        })
+        for s in shapes
+    ]
+    outs = srv.serve(reqs)
+    for s, req, out in zip(shapes, reqs, outs):
+        spec_s = _with_boundary(
+            stencils.get("jacobi2d", shape=s, iterations=iters),
+            Boundary(kind),
+        )
+        want = np.asarray(ref.stencil_iterations_ref(
+            spec_s, {"in_1": jnp.asarray(req.arrays["in_1"])}, iters,
+        ))
+        np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4,
+                                   err_msg=f"{kind} {s}")
+
+
+def test_new_boundary_stock_kernels_bucketable():
+    """heat3d_periodic / blur_replicate / sobel2d_replicate are servable
+    stock kernels: registration accepted, multi-shape traffic exact."""
+    for name, shapes in [
+        ("heat3d_periodic", [(12, 6, 5), (10, 8, 6)]),
+        ("blur_replicate", [(20, 13), (18, 10)]),
+        ("sobel2d_replicate", [(20, 13), (25, 9)]),
+    ]:
+        from repro.serve import StencilRequest, StencilServer
+
+        iters = 2
+        spec0 = stencils.get(name, shape=shapes[0], iterations=iters)
+        bd = DesignCache().bucketed(spec0, tile_rows=8)  # no refusal
+        assert bd.spec.boundary.kind in ("replicate", "periodic")
+        srv = StencilServer(
+            cache=DesignCache(), max_batch=2, bucketing=True, tile_rows=8,
+        )
+        srv.register(name, spec0, iterations=iters)
+        reqs = [
+            StencilRequest(name, {
+                n: RNG.standard_normal(s).astype(dt)
+                for n, (dt, _) in spec0.inputs.items()
+            })
+            for s in shapes
+        ]
+        outs = srv.serve(reqs)
+        for s, req, out in zip(shapes, reqs, outs):
+            spec_s = stencils.get(name, shape=s, iterations=iters)
+            want = np.asarray(ref.stencil_iterations_ref(
+                spec_s,
+                {n: jnp.asarray(a) for n, a in req.arrays.items()}, iters,
+            ))
+            np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4,
+                                       err_msg=f"{name} {s}")
+
+
+def test_periodic_margin_routing_and_masked_spec_structure():
+    """Periodic buckets reserve iterations*radius per side and compile a
+    plain zero-boundary design with no mask; replicate designs thread a
+    mask plus one int32 halo-index input per dimension."""
+    from repro.core.spec import Boundary
+    from repro.runtime import bucket_margins, padded_request_shape
+
+    spec_p = _with_boundary(
+        stencils.jacobi2d(shape=(20, 13), iterations=4), Boundary("periodic")
+    )
+    assert bucket_margins(spec_p, 4) == (4, 4)          # r=1, it=4
+    assert padded_request_shape(spec_p, (20, 13), 4) == (28, 21)
+    mp = masked_spec(spec_p)
+    assert mp.boundary.is_zero and set(mp.inputs) == set(spec_p.inputs)
+    assert not mp.halo_index_inputs
+
+    spec_r = _with_boundary(
+        stencils.jacobi2d(shape=(20, 13), iterations=4), Boundary("replicate")
+    )
+    assert bucket_margins(spec_r, 4) == (0, 0)
+    mr = masked_spec(spec_r)
+    assert mask_input_name(spec_r) in mr.inputs
+    assert len(mr.halo_index_inputs) == 2
+    for n in mr.halo_index_inputs:
+        assert mr.inputs[n][0] == "int32"
+    mr.validate()
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,409 @@
+"""Cross-executor conformance suite: random specs, differential checking.
+
+The gate that lets the executor zoo grow without drifting: a seeded
+random-spec generator (arity, taps, stages, iterations, all four boundary
+modes) drives every execution path against an independent **pure-numpy
+oracle** implemented in this file — no jax, no shared helpers, so a bug
+in `kernels/blockops.py` cannot hide in its own reference:
+
+  * `kernels/ref.py` (the jnp oracle the repo tests against elsewhere),
+  * the fused trapezoid path (`stencil_run(backend="jnp", s=2)`),
+  * the Pallas kernel in interpret mode (row-tiled, on a seed subset —
+    it is the slowest executor),
+  * the bucketed-padded path (`build_bucket_runner`: streamed mask /
+    halo-index / wrap-margin transforms, routed exactly like serving).
+
+Three layers of coverage:
+
+  * ``test_conformance_random_block``: 200 seed-pinned random specs
+    (20 blocks x 10 seeds), deterministic across runs — the CI floor.
+  * ``test_conformance_corpus``: a checked-in regression corpus of seeds
+    whose generated specs exercise known-tricky structure (multi-input
+    iterate choice, local-stage chains, radius-2 taps, bucket-edge
+    straddles).  Add the seed here whenever a fuzz run finds a
+    disagreement, so it is replayed forever.
+  * ``test_conformance_hypothesis_fuzz``: hypothesis-driven seed search
+    beyond the pinned range.  The ``ci`` profile caps examples so tier-1
+    wall-clock stays bounded; the ``nightly`` profile (select with
+    ``HYPOTHESIS_PROFILE=nightly``, run by the nightly workflow job)
+    searches much deeper.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.spec import (
+    BinOp,
+    Boundary,
+    Call,
+    Neg,
+    Num,
+    Ref,
+    Stage,
+    StencilSpec,
+)
+from repro.kernels import ops, ref
+from repro.runtime import (
+    ShapeBucketer,
+    build_bucket_runner,
+    padded_request_shape,
+)
+from repro.core.model import ParallelismConfig
+
+pytestmark = pytest.mark.filterwarnings(
+    "ignore::repro.runtime.batching.DegradedDesignWarning"
+)
+
+RTOL = ATOL = 2e-4   # repo-wide executor tolerance (vs the numpy oracle)
+
+BOUNDARIES = (
+    Boundary("zero"),
+    Boundary("constant", 1.5),
+    Boundary("replicate"),
+    Boundary("periodic"),
+)
+
+
+# ---------------------------------------------------------------------------
+# Pure-numpy oracle (independent of every jax executor)
+# ---------------------------------------------------------------------------
+
+
+def _np_pad(a: np.ndarray, r: int, boundary: Boundary) -> np.ndarray:
+    pads = [(r, r)] * a.ndim
+    k = boundary.kind
+    if k == "zero":
+        return np.pad(a, pads)
+    if k == "constant":
+        return np.pad(a, pads, constant_values=boundary.value)
+    if k == "replicate":
+        return np.pad(a, pads, mode="edge")
+    return np.pad(a, pads, mode="wrap")
+
+
+def _np_eval(expr, get_ref):
+    if isinstance(expr, Num):
+        return expr.value
+    if isinstance(expr, Ref):
+        return get_ref(expr.name, expr.offsets)
+    if isinstance(expr, Neg):
+        return -_np_eval(expr.arg, get_ref)
+    if isinstance(expr, BinOp):
+        lhs = _np_eval(expr.lhs, get_ref)
+        rhs = _np_eval(expr.rhs, get_ref)
+        return {"+": np.add, "-": np.subtract,
+                "*": np.multiply, "/": np.divide}[expr.op](lhs, rhs)
+    if isinstance(expr, Call):
+        args = [_np_eval(a, get_ref) for a in expr.args]
+        if expr.fn == "abs":
+            return np.abs(args[0])
+        acc = args[0]
+        for a in args[1:]:
+            acc = np.maximum(acc, a) if expr.fn == "max" else np.minimum(acc, a)
+        return acc
+    raise TypeError(f"oracle cannot evaluate {expr!r}")
+
+
+def numpy_oracle(
+    spec: StencilSpec, arrays: dict, iterations: int
+) -> np.ndarray:
+    """Iterate ``spec`` entirely in numpy with exact boundary semantics."""
+    env = {n: np.asarray(a) for n, a in arrays.items()}
+    out = env[spec.iterate_input]
+    shape = out.shape
+    for _ in range(iterations):
+        stage_env = dict(env)
+        for stage in spec.stages:
+            r = stage.radius
+            padded = {
+                n: _np_pad(a, r, spec.boundary)
+                for n, a in stage_env.items()
+            }
+
+            def get_ref(name, offsets, padded=padded, r=r):
+                idx = tuple(
+                    slice(r + o, r + o + s) for o, s in zip(offsets, shape)
+                )
+                return padded[name][idx]
+
+            res = _np_eval(stage.expr, get_ref)
+            stage_env[stage.name] = np.asarray(
+                np.broadcast_to(res, shape), dtype=stage.dtype
+            )
+        out = stage_env[spec.output_name]
+        env[spec.iterate_input] = out
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Seeded random-spec generator
+# ---------------------------------------------------------------------------
+
+
+def _random_expr(rng, readable, ndim, radius, depth):
+    """Random expression over the readable arrays, taps within ``radius``."""
+
+    def tap():
+        name = readable[rng.integers(len(readable))]
+        offs = tuple(int(rng.integers(-radius, radius + 1))
+                     for _ in range(ndim))
+        return Ref(name, offs)
+
+    def leaf():
+        if rng.random() < 0.3:
+            return Num(round(float(rng.uniform(-2.0, 2.0)), 3))
+        return tap()
+
+    def build(d):
+        if d <= 0:
+            return leaf()
+        roll = rng.random()
+        if roll < 0.15:
+            return Neg(build(d - 1))
+        if roll < 0.30:
+            fn = ("max", "min", "abs")[rng.integers(3)]
+            n_args = 1 if fn == "abs" else int(rng.integers(2, 4))
+            return Call(fn, tuple(build(d - 1) for _ in range(n_args)))
+        if roll < 0.40:
+            # division only by non-zero constants: division by streamed
+            # data is not bucketable (check_bucketable) by design
+            return BinOp("/", build(d - 1),
+                         Num(round(float(rng.uniform(1.5, 4.0)), 3)))
+        op = "+-*"[rng.integers(3)]
+        return BinOp(op, build(d - 1), build(d - 1))
+
+    expr = build(depth)
+    if not any(isinstance(n, Ref) for n in _walk(expr)):
+        expr = BinOp("+", expr, tap())   # every stage taps streamed data
+    return expr
+
+
+def _walk(expr):
+    yield expr
+    if isinstance(expr, BinOp):
+        yield from _walk(expr.lhs)
+        yield from _walk(expr.rhs)
+    elif isinstance(expr, Call):
+        for a in expr.args:
+            yield from _walk(a)
+    elif isinstance(expr, Neg):
+        yield from _walk(expr.arg)
+
+
+def random_spec(seed: int):
+    """Deterministic (spec, arrays, iterations) for one seed.
+
+    Small grids and shallow trees keep per-seed jit cost low; the
+    dimensions the executors branch on — arity, local stages, tap radius,
+    iterate-input choice, boundary mode, grid raggedness — are all
+    exercised.  The boundary mode cycles with the seed so every block of
+    four seeds covers the full matrix.
+    """
+    rng = np.random.default_rng(seed)
+    ndim = 2 if rng.random() < 0.75 else 3
+    if ndim == 2:
+        shape = tuple(int(rng.integers(4, 10)) for _ in range(2))
+        radius = int(rng.integers(1, 3))
+        depth = int(rng.integers(1, 4))
+    else:
+        shape = tuple(int(rng.integers(4, 7)) for _ in range(3))
+        radius = 1
+        depth = int(rng.integers(1, 3))
+    iterations = int(rng.integers(1, 4)) if ndim == 2 else int(
+        rng.integers(1, 3)
+    )
+    boundary = BOUNDARIES[seed % len(BOUNDARIES)]
+
+    n_inputs = int(rng.integers(1, 3))
+    inputs = {
+        f"in_{i}": ("float32", shape) for i in range(n_inputs)
+    }
+    iterate = f"in_{int(rng.integers(n_inputs))}"
+    readable = list(inputs)
+    stages = []
+    if rng.random() < 0.4:
+        stages.append(Stage(
+            "tmp", "float32",
+            _random_expr(rng, readable, ndim, 1, depth), False,
+        ))
+        readable.append("tmp")
+    stages.append(Stage(
+        "out", "float32",
+        _random_expr(rng, readable, ndim, radius, depth), True,
+    ))
+    spec = StencilSpec(
+        name=f"CONF-{seed}",
+        iterations=iterations,
+        inputs=inputs,
+        stages=tuple(stages),
+        iterate_input=iterate,
+        boundary=boundary,
+    )
+    spec.validate()
+    arrays = {
+        n: rng.standard_normal(shape).astype(np.float32) for n in inputs
+    }
+    return spec, arrays, iterations
+
+
+# ---------------------------------------------------------------------------
+# Differential check
+# ---------------------------------------------------------------------------
+
+
+def check_seed(seed: int, pallas: bool) -> None:
+    spec, arrays, iters = random_spec(seed)
+    want = numpy_oracle(spec, arrays, iters)
+    assert np.isfinite(want).all(), f"seed {seed}: oracle not finite"
+    jarrays = {n: jnp.asarray(a) for n, a in arrays.items()}
+    msg = (
+        f"seed {seed}: {spec.boundary.kind} {spec.ndim}-D "
+        f"{spec.shape} it={iters} r={spec.radius}"
+    )
+    # Scale-aware tolerance: random iterated kernels can amplify grid
+    # magnitudes by orders of magnitude, and float32 re-association noise
+    # scales with the largest intermediate, not with each element —
+    # cancelled cells would otherwise fail on meaningless trailing digits.
+    atol = ATOL * max(1.0, float(np.abs(want).max()))
+
+    got_ref = np.asarray(ref.stencil_iterations_ref(spec, jarrays, iters))
+    np.testing.assert_allclose(
+        got_ref, want, rtol=RTOL, atol=atol, err_msg=f"{msg} [jnp ref]"
+    )
+
+    got_fused = np.asarray(ops.stencil_run(
+        spec, jarrays, iters, s=2, backend="jnp"
+    ))
+    np.testing.assert_allclose(
+        got_fused, want, rtol=RTOL, atol=atol, err_msg=f"{msg} [trapezoid]"
+    )
+
+    if pallas:
+        got_pl = np.asarray(ops.stencil_run(
+            spec, jarrays, iters, s=2, backend="pallas", interpret=True,
+            tile_rows=4,
+        ))
+        np.testing.assert_allclose(
+            got_pl, want, rtol=RTOL, atol=atol, err_msg=f"{msg} [pallas]"
+        )
+
+    bucket = ShapeBucketer().bucket_for(
+        padded_request_shape(spec, spec.shape, iters)
+    )
+    run = build_bucket_runner(
+        spec, bucket, ParallelismConfig("temporal", k=1, s=2), tile_rows=8,
+    )
+    got_bucket = run({n: a[None] for n, a in arrays.items()})[0]
+    np.testing.assert_allclose(
+        got_bucket, want, rtol=RTOL, atol=atol,
+        err_msg=f"{msg} [bucketed {bucket}]",
+    )
+
+
+# ---------------------------------------------------------------------------
+# CI floor: 200 seed-pinned random specs (deterministic)
+# ---------------------------------------------------------------------------
+
+N_BLOCKS, BLOCK = 20, 10          # 200 specs; Pallas on every 4th seed
+
+
+@pytest.mark.parametrize("block", range(N_BLOCKS))
+def test_conformance_random_block(block):
+    for seed in range(block * BLOCK, (block + 1) * BLOCK):
+        check_seed(seed, pallas=(seed % 4 == 0))
+
+
+# ---------------------------------------------------------------------------
+# Seed-pinned regression corpus
+# ---------------------------------------------------------------------------
+
+# Seeds replayed forever (beyond the 0..199 CI floor).  Each entry names
+# the structural trait it pins (verified against the generator); add the
+# offending seed here whenever any fuzz run (nightly hypothesis job
+# included) finds an executor disagreement.
+REGRESSION_CORPUS = [
+    (201, "constant 3-D two-input spec iterating the second input"),
+    (203, "periodic 3-D with a local stage chain (wrap on 3 dims)"),
+    (207, "periodic 2-D iterations=3 (widest wrap margin in suite)"),
+    (209, "constant 2-D radius-2 with a local stage"),
+    (210, "replicate 2-D radius-2 taps (halo-index gather depth 2)"),
+    (212, "zero-boundary two-input local-stage chain, ragged 8x5"),
+    (226, "replicate 2-D it=3 with value blow-up (scale-aware tolerance)"),
+    (250, "replicate pow2 rows: real/belt edge on a bucket-rung boundary"),
+]
+
+
+@pytest.mark.parametrize(
+    "seed", [s for s, _ in REGRESSION_CORPUS],
+    ids=[f"seed{s}" for s, _ in REGRESSION_CORPUS],
+)
+def test_conformance_corpus(seed):
+    check_seed(seed, pallas=True)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis fuzzing beyond the pinned range (ci-capped; nightly deep)
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis
+    from hypothesis import given, settings, strategies as st
+
+    settings.register_profile(
+        "ci", max_examples=15, deadline=None,
+        suppress_health_check=list(hypothesis.HealthCheck),
+    )
+    settings.register_profile(
+        "nightly", max_examples=1000, deadline=None,
+        suppress_health_check=list(hypothesis.HealthCheck),
+    )
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
+    HAVE_HYPOTHESIS = True
+except ImportError:     # the seed-pinned layers above still run
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(seed=st.integers(min_value=1000, max_value=2**31 - 1))
+    def test_conformance_hypothesis_fuzz(seed):
+        # restrict to the cheap executors so the nightly profile's
+        # example count buys breadth; pallas depth comes from the pinned
+        # layers
+        check_seed(seed, pallas=False)
+
+else:
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_conformance_hypothesis_fuzz():
+        pass
+
+
+def test_boundary_modes_all_covered():
+    """The seed-cycling generator must cover all 4 modes in every block."""
+    kinds = {random_spec(s)[0].boundary.kind for s in range(8)}
+    assert kinds == {"zero", "constant", "replicate", "periodic"}
+
+
+def test_numpy_oracle_matches_known_jacobi():
+    """Anchor the oracle itself against a hand-checkable case."""
+    spec, _, _ = random_spec(0)
+    del spec
+    jac = StencilSpec(
+        name="J", iterations=1,
+        inputs={"a": ("float32", (3, 3))},
+        stages=(Stage("o", "float32", BinOp(
+            "+", Ref("a", (0, 0)), Ref("a", (0, 1))
+        ), True),),
+        iterate_input="a",
+        boundary=Boundary("periodic"),
+    )
+    x = np.arange(9, dtype=np.float32).reshape(3, 3)
+    got = numpy_oracle(jac, {"a": x}, 1)
+    want = x + np.roll(x, -1, axis=1)
+    np.testing.assert_array_equal(got, want)

@@ -363,3 +363,89 @@ def test_autotune_cache_build_false_caches_ranking():
     d2 = autotune(spec, cache=cache, build=False)
     assert cache.misses == before
     assert d2.config == d1.config
+
+
+# ---------------------------------------------------------------------------
+# cache-level capacity management (max_designs LRU over compiled runners)
+# ---------------------------------------------------------------------------
+
+
+def test_max_designs_validation():
+    with pytest.raises(ValueError, match="max_designs"):
+        DesignCache(max_designs=0)
+
+
+def test_max_designs_lru_evicts_and_rebuilds_on_rehit():
+    """The shared cache itself is now capacity-managed: past the cap the
+    least-recently-hit compiled runner is dropped, an evict-then-rehit is
+    a rebuild miss on the same key, and counters record the churn."""
+    cache = DesignCache(max_designs=1)
+    a = stencils.jacobi2d(shape=(16, 8), iterations=2)
+    b = stencils.jacobi2d(shape=(24, 8), iterations=2)
+    ca = cache.get_or_build(a)
+    assert cache.runner_evictions == 0
+    cb = cache.get_or_build(b)            # evicts a's runner
+    assert cache.runner_evictions == 1
+    assert not ca.hit and not cb.hit
+    # rankings stay cached, so the rehit re-jits but does not re-rank
+    misses_before = cache.misses
+    ca2 = cache.get_or_build(a)
+    assert cache.runner_evictions == 2    # b evicted in turn
+    assert not ca2.hit                    # the combined call was not free
+    assert cache.misses == misses_before + 1   # exactly the runner rebuild
+    # the rebuilt runner still serves traffic correctly
+    arrays = batch_for(a, B=2)
+    out = ca2.runner(arrays)
+    for i in range(2):
+        np.testing.assert_allclose(
+            out[i], per_grid_oracle(a, arrays, 2, i), rtol=2e-4, atol=2e-4,
+        )
+
+
+def test_max_designs_lru_order_follows_hits():
+    cache = DesignCache(max_designs=2)
+    a = stencils.jacobi2d(shape=(16, 8), iterations=2)
+    b = stencils.jacobi2d(shape=(24, 8), iterations=2)
+    c = stencils.jacobi2d(shape=(32, 8), iterations=2)
+    cache.get_or_build(a)
+    cache.get_or_build(b)
+    cache.get_or_build(a)                 # refresh a: now MRU
+    cache.get_or_build(c)                 # evicts b, not a
+    assert cache.runner_evictions == 1
+    misses = cache.misses
+    assert cache.get_or_build(a).hit      # still resident
+    assert cache.misses == misses
+    assert not cache.get_or_build(b).hit  # was evicted: rebuild
+
+
+def test_max_designs_composes_with_bucketed_registrations():
+    """Bucket-ladder eviction drops the registration's reference; the
+    cache cap bounds the shared memoization underneath.  A bucketed rehit
+    after cache eviction rebuilds instead of silently growing."""
+    cache = DesignCache(max_designs=1)
+    spec = stencils.jacobi2d(shape=(20, 13), iterations=2)
+    bd = cache.bucketed(spec, tile_rows=8)
+    bd.runner_for((20, 13))               # bucket (32, 16)
+    bd2 = cache.bucketed(spec, tile_rows=8)
+    bd2.runner_for((40, 40))              # bucket (64, 64): evicts the first
+    assert cache.runner_evictions >= 1
+    # the first registration still holds its compiled reference and serves
+    arrays = {"in_1": RNG.standard_normal((1, 20, 13)).astype(np.float32)}
+    out = bd.runner_for((20, 13)).runner(arrays)
+    np.testing.assert_allclose(
+        out[0],
+        np.asarray(ref.stencil_iterations_ref(
+            stencils.jacobi2d(shape=(20, 13), iterations=2),
+            {"in_1": jnp.asarray(arrays["in_1"][0])}, 2,
+        )),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+def test_clear_resets_eviction_counter():
+    cache = DesignCache(max_designs=1)
+    cache.get_or_build(stencils.jacobi2d(shape=(16, 8), iterations=2))
+    cache.get_or_build(stencils.jacobi2d(shape=(24, 8), iterations=2))
+    assert cache.runner_evictions == 1
+    cache.clear()
+    assert cache.runner_evictions == 0 and len(cache) == 0
