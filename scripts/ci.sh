@@ -39,9 +39,10 @@ python -m pytest -x -q --durations=15 "${MARK[@]}"
 echo "== smoke: examples/quickstart.py =="
 python examples/quickstart.py
 
-echo "== smoke: serving runtime (cache + batching + bucketing + async) =="
-# --smoke scales the mixed-geometry trace down to CI size while asserting
-# the same gates: >=20 shapes from <=4 bucket designs, >=5x over per-shape
+echo "== smoke: serving runtime (pipeline + cache + batching + bucketing) =="
+# --smoke scales the traces down to CI size while asserting the same
+# gates: tile pipeline no slower than vmap with strictly fewer HLO fusion
+# boundaries; >=20 shapes from <=4 bucket designs, >=5x over per-shape
 # autotune, async dispatch not slower than sync, reference-exact results.
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
   python benchmarks/serving_throughput.py --smoke

@@ -335,6 +335,17 @@ def build_runner(
     many grids (the serving hot path; see :mod:`repro.runtime.batching`).
     """
     it = spec.iterations if iterations is None else iterations
+    if spec.wrap_index_inputs:
+        # TODO(distribute): re-imposing a streamed wrap margin between
+        # rounds needs a collective gather across shards (the wrap source
+        # rows live on the opposite device).  Until that lands, shard_map
+        # serving keeps the wide iterations*radius periodic margin and
+        # narrow-margin specs stay single-device; the auto-tuner's
+        # feasibility retry falls back to the next candidate.
+        raise ValueError(
+            "streamed wrap margins (wrap_index_inputs) are single-device "
+            "only; shard_map designs require the wide periodic margin"
+        )
     n_dev = cfg.devices_needed
     if devices is None:
         devices = jax.devices()[:n_dev]
@@ -408,8 +419,28 @@ def build_runner(
 
     names = list(spec.inputs)
     if batched:
-        # batch axis is unsharded and invisible to the local program
-        local = jax.vmap(local)
+        # batch axis is unsharded and invisible to the local program.
+        # With cfg.batch_tile the batch is folded into a sequential grid
+        # of batch_tile-wide vmapped chunks (the shard_map analogue of
+        # the batch-in-grid tile pipeline): entries stream through the
+        # same local-program residency instead of widening every
+        # intermediate by the whole batch.  Falls back to one plain vmap
+        # when the batch does not tile evenly.
+        vm = jax.vmap(local)
+        bt = cfg.batch_tile
+
+        def local_batched(arrays: dict):
+            B = next(iter(arrays.values())).shape[0]
+            if bt and B > bt and B % bt == 0:
+                chunked = {
+                    n: a.reshape((B // bt, bt) + a.shape[1:])
+                    for n, a in arrays.items()
+                }
+                out = jax.lax.map(vm, chunked)
+                return out.reshape((B,) + out.shape[2:])
+            return vm(arrays)
+
+        local = local_batched
         if in_spec != P():
             in_spec = P(None, *in_spec)
             out_spec = P(None, *out_spec)

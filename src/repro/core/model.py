@@ -42,9 +42,20 @@ class ParallelismConfig:
     k: int = 1            # degree of spatial parallelism (devices / PE groups)
     s: int = 1            # degree of temporal parallelism (stages / fusion depth)
     tile_rows: int = 0    # TPU only: Pallas row-tile B (0 = executor default)
+    batch_tile: int = 0   # TPU only: batch entries folded into the kernel grid
+                          # per step (0 = whole batch under vmap)
+    buffer_depth: int = 0  # TPU only: explicit HBM->VMEM buffers per stream.
+                          # 0 = one-shot whole-block kernels under vmap
+                          # (copy/compute overlap left to XLA); >= 2 = the
+                          # explicitly double-buffered tile pipeline.
 
     def __post_init__(self):
         assert self.variant in VARIANTS, self.variant
+        assert self.batch_tile >= 0, self.batch_tile
+        assert self.buffer_depth in (0,) or self.buffer_depth >= 2, (
+            "buffer_depth is 0 (vmapped one-shot) or >= 2 (pipelined); "
+            "a single buffer cannot overlap copy with compute"
+        )
 
     @property
     def devices_needed(self) -> int:
@@ -64,6 +75,7 @@ class Prediction:
     hbm_bytes: float            # per-device bytes over the whole run
     flops: float                # per-device ops over the whole run
     rounds: int
+    vmem_bytes: float = 0.0     # peak VMEM working set the design schedules
     notes: str = ""
 
     @property
@@ -350,10 +362,51 @@ def predict_tpu(
         n_msgs = 2 * rounds
     collective_term = coll_bytes / tpu.ici_bw + n_msgs * tpu.ici_latency
 
+    # ---- VMEM footprint / pipeline overlap ----
+    # Working set of one (tile + 2sr) x C_pad residency: every streamed
+    # input block, one working copy, one output block.
+    in_rows = tile + 2 * s * r
+    cpad = _round_up(C + 2 * s * r, 128)
+    tile_bytes = in_rows * cpad * itemsize * (n_in + 2)
+    if cfg.buffer_depth >= 2:
+        # Explicitly pipelined tile loop: HBM->VMEM copies for step i+1 are
+        # issued while step i computes, so copy/compute overlap is scheduled
+        # rather than hoped for.  The price is the pipeline fill — the
+        # (depth-1) tile transfers before the first compute of each round —
+        # and a buffer_depth-deep VMEM footprint.
+        # One fill per kernel launch (per round); with the batch axis
+        # folded into the grid the launch streams batch_tile * n_tiles
+        # tiles, so per-grid fill cost amortizes over both.
+        vmem_bytes = float(cfg.buffer_depth * tile_bytes)
+        steps_per_launch = max(n_tiles * max(cfg.batch_tile, 1), 1)
+        fill_term = (
+            (cfg.buffer_depth - 1)
+            * memory_term / max(steps_per_launch, 1)
+        )
+        overlap_penalty = 0.0
+        notes = "tile-pipelined"
+        if vmem_bytes > tpu.vmem_bytes:
+            # Infeasible residency: the schedule would thrash VMEM.  Keep
+            # the candidate rankable but never preferable.
+            fill_term += memory_term + compute_term
+            notes = "tile-pipelined (VMEM overflow)"
+    else:
+        # One-shot whole-block kernels under vmap: XLA's implicit double
+        # buffering overlaps only part of the copy with compute, so the
+        # hidden term leaks back into latency (modelled as half the
+        # smaller roofline term, the overhead-decomposition idiom).
+        vmem_bytes = float(2 * tile_bytes)
+        fill_term = 0.0
+        overlap_penalty = 0.5 * min(compute_term, memory_term)
+        notes = ""
+
     # Dataflow overlap: compute and HBM stream concurrently (the TPU DMA
     # engine double-buffers VMEM tiles), collectives serialize with rounds
     # only for the *_s variants; *_r pay it once up front.
-    latency = max(compute_term, memory_term) + collective_term
+    latency = (
+        max(compute_term, memory_term)
+        + overlap_penalty + fill_term + collective_term
+    )
     return Prediction(
         config=cfg,
         latency=latency,
@@ -364,6 +417,8 @@ def predict_tpu(
         hbm_bytes=hbm_bytes,
         flops=flops,
         rounds=rounds,
+        vmem_bytes=vmem_bytes,
+        notes=notes,
     )
 
 
@@ -381,6 +436,14 @@ def tpu_candidate_configs(
     out: list[ParallelismConfig] = []
     for s in _fusion_depths(min(it, s_max_vmem)):
         out.append(ParallelismConfig("temporal", k=1, s=s, tile_rows=tile))
+        # Batch-in-grid tile pipeline: same fusion depth, but the batch
+        # axis is folded into the kernel grid and HBM->VMEM copies are
+        # explicitly double-buffered.  vmem_fusion_limit already bounds s
+        # to a 2-deep residency, so depth-2 candidates are always feasible.
+        out.append(ParallelismConfig(
+            "temporal", k=1, s=s, tile_rows=tile,
+            batch_tile=8, buffer_depth=2,
+        ))
     for k in ks:
         if k == 1:
             continue

@@ -227,6 +227,18 @@ class StencilSpec:
     # (replicate) exterior from per-request streamed data.  Stages never
     # read these inputs; they ride the executors like any other array.
     halo_index_inputs: tuple[str, ...] = ()
+    # Streamed wrap plumbing (narrow periodic bucket margins): when
+    # non-empty, one input name per dimension naming an int32 grid-shaped
+    # array of *wrap source coordinates* for that axis.  Executors
+    # re-impose ``out[i, j, ...] = out[widx0[i], widx1[j], ...]`` on the
+    # iterate **between fused rounds** (not per stage), refreshing a
+    # ``wrap_round_depth * radius``-deep periodic margin from the real
+    # region so the bucket needs only that much margin instead of
+    # ``iterations * radius``.  Executors must cap the fused depth they
+    # run per round at ``wrap_round_depth``.  Stages never read these
+    # inputs.
+    wrap_index_inputs: tuple[str, ...] = ()
+    wrap_round_depth: int = 0
 
     def __hash__(self):
         # specs are jit static args; normalise the inputs mapping
@@ -238,6 +250,8 @@ class StencilSpec:
             self.iterate_input,
             self.boundary,
             self.halo_index_inputs,
+            self.wrap_index_inputs,
+            self.wrap_round_depth,
         ))
 
     # ---------------- derived static properties ----------------
@@ -361,6 +375,26 @@ class StencilSpec:
                     raise ValueError(
                         f"halo index input {n!r} is not a declared input"
                     )
+        if self.wrap_index_inputs:
+            if len(self.wrap_index_inputs) != self.ndim:
+                raise ValueError(
+                    f"wrap_index_inputs must name one input per dimension "
+                    f"({self.ndim}), got {self.wrap_index_inputs}"
+                )
+            for n in self.wrap_index_inputs:
+                if n not in self.inputs:
+                    raise ValueError(
+                        f"wrap index input {n!r} is not a declared input"
+                    )
+            if self.wrap_round_depth < 1:
+                raise ValueError(
+                    "wrap_index_inputs requires wrap_round_depth >= 1 "
+                    f"(got {self.wrap_round_depth})"
+                )
+        elif self.wrap_round_depth:
+            raise ValueError(
+                "wrap_round_depth without wrap_index_inputs has no effect"
+            )
 
 
 def _check_vars_bound(expr: Expr, bound: frozenset, stage: str) -> None:

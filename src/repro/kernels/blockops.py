@@ -163,6 +163,20 @@ def streamed_halo_fixup(
     cells may gather clipped garbage, but their values never reach the
     safe interior within a round and are re-imposed or sliced off
     outside it.
+
+    Clamp-map contract: every halo-index producer in the repo
+    (:func:`repro.runtime.bucketing.halo_index_host` and the all-zero
+    filler maps) emits per-axis maps of the form ``clip(identity, lo,
+    hi)`` — monotone clamps of the axis coordinate.  Composing with the
+    block-local shift and clip above preserves that form, so the gather
+    is equivalent to *static slicing*: rows below ``lo`` copy row ``lo``,
+    rows above ``hi`` copy row ``hi``, the middle is identity.  That is
+    what this helper emits — two ``dynamic_index_in_dim`` broadcasts and
+    two ``where`` selects per axis instead of a ``take_along_axis``
+    gather, which keeps the inner loop on the TPU's statically-addressed
+    VMEM path (gathers lower to scalar loops on the VPU).  All-constant
+    filler maps are the degenerate ``lo == hi`` clamp and come out of the
+    same select path.
     """
     names = spec.halo_index_inputs
     out = block
@@ -170,7 +184,14 @@ def streamed_halo_fixup(
         idx = env[name]
         tgt = idx - row0 if d == 0 else idx + col_pads[d - 1]
         tgt = jnp.clip(tgt, 0, out.shape[d] - 1).astype(jnp.int32)
-        out = jnp.take_along_axis(out, tgt, axis=d)
+        lo = jnp.min(tgt)
+        hi = jnp.max(tgt)
+        coords = jax.lax.broadcasted_iota(jnp.int32, out.shape, d)
+        at_lo = jax.lax.dynamic_index_in_dim(out, lo, axis=d, keepdims=True)
+        at_hi = jax.lax.dynamic_index_in_dim(out, hi, axis=d, keepdims=True)
+        out = jnp.where(
+            coords < lo, at_lo, jnp.where(coords > hi, at_hi, out)
+        )
     return out
 
 
@@ -230,6 +251,36 @@ def fused_iterations_on_block(
     return cur
 
 
+def wrap_round_fixup(
+    out: jnp.ndarray,
+    env: Mapping[str, jnp.ndarray],
+    spec: StencilSpec,
+) -> jnp.ndarray:
+    """Re-impose a streamed periodic wrap margin on the iterate.
+
+    ``spec.wrap_index_inputs`` names one int32 grid-shaped input per
+    dimension holding, for every cell, the coordinate it should copy from
+    — identity on the real region, ``margin + ((coord - margin) mod S)``
+    on the wrap belt of a bucket design.  Executors call this **between
+    fused rounds** (never before the first): a round of depth
+    ``wrap_round_depth`` stales at most ``wrap_round_depth * radius``
+    margin cells, and this global gather refreshes them from the real
+    region the round just committed.  Only the iterate needs it —
+    constant inputs' wrapped margins never go stale.
+
+    Unlike the per-stage clamp maps (:func:`streamed_halo_fixup`), wrap
+    maps are modular, not monotone, so this stays a ``take_along_axis``
+    gather; it runs once per round at grid granularity, outside the tile
+    loop.
+    """
+    for d, name in enumerate(spec.wrap_index_inputs):
+        tgt = jnp.clip(
+            jnp.asarray(env[name]), 0, out.shape[d] - 1
+        ).astype(jnp.int32)
+        out = jnp.take_along_axis(out, tgt, axis=d)
+    return out
+
+
 def fused_iterations_dense(
     spec: StencilSpec,
     arrays: Mapping[str, jnp.ndarray],
@@ -243,6 +294,10 @@ def fused_iterations_dense(
     ``s*r``-deep boundary-padded halo per round (for periodic this is the
     wrapped data the in-block fixup never regenerates), columns an
     ``r``-deep belt the per-stage fixup refreshes.
+
+    Specs carrying streamed wrap inputs cap the fused depth per round at
+    ``spec.wrap_round_depth`` and re-wrap the iterate's margin between
+    rounds (:func:`wrap_round_fixup`).
     """
     grid_shape = spec.shape
     left = iterations
@@ -250,8 +305,15 @@ def fused_iterations_dense(
     out = cur[spec.iterate_input]
     boundary = spec.boundary
     r = spec.radius
+    first = True
     while left > 0:
         step = min(s, left)
+        if spec.wrap_index_inputs:
+            step = min(step, max(spec.wrap_round_depth, 1))
+            if not first:
+                out = wrap_round_fixup(out, cur, spec)
+                cur[spec.iterate_input] = out
+        first = False
         if boundary.is_zero:
             out = fused_iterations_on_block(
                 spec, cur, step, row0=0, grid_shape=grid_shape,

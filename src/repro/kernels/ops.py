@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.core.spec import StencilSpec
 from repro.kernels import ref as _ref
-from repro.kernels.blockops import fused_iterations_dense
+from repro.kernels.blockops import fused_iterations_dense, wrap_round_fixup
 from repro.kernels.stencil import stencil_pallas
 
 
@@ -56,8 +56,15 @@ def stencil_run(
     env = dict(arrays)
     out = env[spec.iterate_input]
     left = it
+    first = True
     while left > 0:
         step = min(s, left)
+        if spec.wrap_index_inputs:
+            step = min(step, max(spec.wrap_round_depth, 1))
+            if not first:
+                out = wrap_round_fixup(out, env, spec)
+                env[spec.iterate_input] = out
+        first = False
         out = stencil_pallas(
             spec, env, step, tile_rows=tile_rows,
             interpret=interpret, align_cols=align_cols,

@@ -35,6 +35,8 @@ from repro.runtime.bucketing import (
     pad_grid,
     padded_request_shape,
     with_shape,
+    wrap_index_host,
+    wrap_index_names,
 )
 from repro.runtime.cache import (
     BucketEntry,
@@ -69,6 +71,8 @@ __all__ = [
     "pad_grid",
     "padded_request_shape",
     "with_shape",
+    "wrap_index_host",
+    "wrap_index_names",
     "BucketEntry",
     "BucketedDesign",
     "BucketStats",

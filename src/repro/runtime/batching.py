@@ -5,12 +5,20 @@ bitstream across many invocations: the expensive artefact (an auto-tuned,
 jitted design) is built once and then fed batches of grids, with the batch
 axis threaded through whichever executor the design uses:
 
-  * single-device designs run the single-PE fused kernel under ``jax.vmap``
-    (the Pallas kernel gains a leading grid dimension; the jnp fallback
-    vectorises directly), so B grids share one kernel launch sequence;
+  * single-device designs with pipeline knobs (``cfg.buffer_depth >= 2``)
+    run the batch-in-grid tile pipeline (:mod:`repro.kernels.pipeline`):
+    the batch axis is folded into the kernel grid with explicitly
+    double-buffered HBM->VMEM copies, so all B grids stream through one
+    VMEM-tile residency with scheduled copy/compute overlap;
+  * plain single-device designs run the single-PE fused kernel under
+    ``jax.vmap`` (the legacy one-shot path, still the differential
+    reference: both paths run the same tile program, bitwise-identical
+    on a fixed backend);
   * multi-device designs run the same shard_map local programs vmapped
-    over the batch axis (see ``build_runner(batched=True)``), so rows stay
-    sharded across the mesh while B grids ride one collective schedule.
+    over the batch axis (see ``build_runner(batched=True)``; with
+    ``cfg.batch_tile`` the batch is chunked into a sequential grid of
+    vmapped tiles), so rows stay sharded across the mesh while B grids
+    ride one collective schedule.
 
 Batch-axis semantics: every array in a batch call is ``(B,) + spec.shape``
 and batch entries are fully independent — there is no halo exchange or any
@@ -41,7 +49,7 @@ import numpy as np
 from repro.core.distribute import build_runner
 from repro.core.model import ParallelismConfig
 from repro.core.spec import StencilSpec
-from repro.kernels import ops
+from repro.kernels import ops, pipeline
 from repro.runtime.bucketing import bucket_plan
 
 
@@ -155,8 +163,9 @@ def build_batched_runner(
     one sanctioned silent case is a temporal design on a one-device host,
     where the PE cascade degenerates to fused rounds on one chip with the
     fusion depth (and the analytical model's single-chip prediction)
-    preserved.  The returned callable carries ``.path`` ("single_pe" or
-    "shard_map"), ``.backend``, ``.n_devices``, ``.devices_requested``,
+    preserved.  The returned callable carries ``.path`` ("single_pe",
+    "tile_pipeline", or "shard_map"), ``.backend``, ``.n_devices``,
+    ``.devices_requested``,
     and ``.degraded`` for reporting and cache keying.
     """
     it = spec.iterations if iterations is None else iterations
@@ -176,13 +185,31 @@ def build_batched_runner(
         s = max(min(cfg.s, it), 1)
         tile = cfg.tile_rows or tile_rows
 
-        def one_grid(arrays: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
-            return ops.stencil_run(
-                spec, arrays, it, s=s, tile_rows=tile, backend=bk,
-                interpret=interp, align_cols=align_cols,
-            )
+        if cfg.buffer_depth >= 2:
+            # Batch-in-grid tile pipeline: the batch axis is folded into
+            # the kernel grid with explicitly double-buffered HBM->VMEM
+            # copies (Pallas grid pipeline on TPU, software-prefetched
+            # fori_loop on CPU hosts) instead of vmapping whole-grid
+            # programs.  Same tile program as the vmapped path, so
+            # results are bitwise-identical on a fixed backend.
+            def batched_fn(arrays: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
+                return pipeline.stencil_run_batched(
+                    spec, arrays, it, s=s, tile_rows=tile, backend=bk,
+                    interpret=interp, align_cols=align_cols,
+                )
 
-        fn = jax.jit(jax.vmap(one_grid))
+            fn = jax.jit(batched_fn)
+            path = "tile_pipeline"
+        else:
+
+            def one_grid(arrays: Mapping[str, jnp.ndarray]) -> jnp.ndarray:
+                return ops.stencil_run(
+                    spec, arrays, it, s=s, tile_rows=tile, backend=bk,
+                    interpret=interp, align_cols=align_cols,
+                )
+
+            fn = jax.jit(jax.vmap(one_grid))
+            path = "single_pe"
 
         def stage(arrays: Mapping[str, jnp.ndarray]) -> dict:
             return {
@@ -195,7 +222,7 @@ def build_batched_runner(
         def finalize(out: jnp.ndarray) -> np.ndarray:
             return np.asarray(out)
 
-        path, mesh, n_used = "single_pe", None, 1
+        mesh, n_used = None, 1
     else:
         bk = "shard_map"
         inner = build_runner(
@@ -236,6 +263,7 @@ def build_bucket_runner(
     align_cols: int = 1,
     strict: bool = False,
     inner=None,
+    wrap_rounds: int | None = None,
 ):
     """Streamed-boundary wrapper: a design compiled for ``bucket_shape``
     serving any fitting grid with the spec's exact boundary semantics.
@@ -261,10 +289,14 @@ def build_bucket_runner(
 
     Pass ``inner`` to wrap an already-compiled batched runner for the
     streamed bucket spec (the design-cache path) instead of compiling
-    here.
+    here.  ``wrap_rounds`` (periodic only) serves from the narrow
+    ``wrap_rounds * radius`` margin with streamed wrap maps re-imposing
+    the wrap between fused rounds — single-device executors only.
     """
     bucket_shape = tuple(int(b) for b in bucket_shape)
-    plan = bucket_plan(spec, bucket_shape, iterations=iterations)
+    plan = bucket_plan(
+        spec, bucket_shape, iterations=iterations, wrap_rounds=wrap_rounds
+    )
     mspec = plan.mspec
     if inner is None:
         inner = build_batched_runner(
@@ -291,6 +323,7 @@ def build_bucket_runner(
     run.mask_name = plan.mask_name
     run.bucket_shape = bucket_shape
     run.plan = plan
+    run.wrap_rounds = plan.wrap_rounds
     run.inner = inner
     run.cfg = inner.cfg
     run.iterations = inner.iterations

@@ -58,11 +58,17 @@ mode is bucketable, each by the streaming trick that fits its semantics:
                   argument) and never reaches the real region.  The
                   compiled design is a plain zero-boundary bucket
                   iteration — no wrap machinery, no mask — and the real
-                  region is bit-identical to unpadded execution.  Cost:
-                  the bucket must fit ``shape + 2 * iterations * radius``
-                  per dim, so long-running periodic kernels pay a wide
-                  margin (ROADMAP notes the per-round re-wrap
-                  optimization that would shrink it to ``s * radius``).
+                  region is bit-identical to unpadded execution.  On
+                  single-device paths the serving layer passes
+                  ``wrap_rounds`` (the design's fused depth ``s``), which
+                  shrinks the margin to ``s * radius``: streamed
+                  per-dimension **wrap maps** re-impose the wrap on the
+                  iterate between fused rounds
+                  (:func:`repro.kernels.blockops.wrap_round_fixup`), so
+                  the margin only has to survive one round.  shard_map
+                  designs keep the wide ``iterations * radius`` margin
+                  (the re-wrap would need a cross-shard collective; see
+                  the TODO in :mod:`repro.core.distribute`).
 
 Kernels whose padding cells could compute non-finite values (a division
 by streamed data: 0/0 or x/0 would survive the mask multiply as NaN) are
@@ -200,6 +206,14 @@ def halo_index_names(spec: StencilSpec) -> tuple[str, ...]:
     return tuple(names)
 
 
+def wrap_index_names(spec: StencilSpec) -> tuple[str, ...]:
+    """Collision-free per-dimension streamed wrap-index input names."""
+    names: list[str] = []
+    for d in range(spec.ndim):
+        names.append(_fresh_name(spec, f"_widx{d}", taken=names))
+    return tuple(names)
+
+
 def check_bucketable(spec: StencilSpec) -> None:
     """Reject specs the streamed bucket transforms cannot serve bit-exactly.
 
@@ -233,24 +247,34 @@ def boundary_fill(spec: StencilSpec) -> float:
 
 
 def bucket_margins(
-    spec: StencilSpec, iterations: int | None = None
+    spec: StencilSpec,
+    iterations: int | None = None,
+    wrap_rounds: int | None = None,
 ) -> tuple[int, ...]:
     """Per-dimension margin a bucket reserves on *each* side of the grid.
 
     Only ``periodic`` needs one: the wrapped extension is streamed in as
     data and goes stale from the bucket edge inward at ``spec.radius``
-    per iteration, so the margin must cover the whole run
-    (``iterations * radius``).  All other modes re-impose their exterior
-    in-kernel every stage and place the grid at the bucket origin.
+    per iteration.  With ``wrap_rounds=None`` (the legacy wide margin)
+    the margin covers the whole run (``iterations * radius``); with
+    ``wrap_rounds`` set, the executors re-impose the wrap between fused
+    rounds from streamed wrap maps, so the margin only has to survive
+    one round: ``wrap_rounds * radius``.  All other modes re-impose
+    their exterior in-kernel every stage and place the grid at the
+    bucket origin.
     """
     if spec.boundary.kind != "periodic":
         return (0,) * spec.ndim
     it = spec.iterations if iterations is None else iterations
-    return (max(int(it), 1) * spec.radius,) * spec.ndim
+    rounds = int(it) if wrap_rounds is None else min(int(wrap_rounds), int(it))
+    return (max(rounds, 1) * spec.radius,) * spec.ndim
 
 
 def padded_request_shape(
-    spec: StencilSpec, shape: Sequence[int], iterations: int | None = None
+    spec: StencilSpec,
+    shape: Sequence[int],
+    iterations: int | None = None,
+    wrap_rounds: int | None = None,
 ) -> tuple[int, ...]:
     """The shape bucket routing must fit: grid plus both halo margins."""
     shape = tuple(int(s) for s in shape)
@@ -258,11 +282,13 @@ def padded_request_shape(
         raise ValueError(
             f"spec {spec.name!r} is {spec.ndim}-D, got shape {shape}"
         )
-    margins = bucket_margins(spec, iterations)
+    margins = bucket_margins(spec, iterations, wrap_rounds)
     return tuple(s + 2 * m for s, m in zip(shape, margins))
 
 
-def masked_spec(spec: StencilSpec) -> StencilSpec:
+def masked_spec(
+    spec: StencilSpec, wrap_rounds: int | None = None
+) -> StencilSpec:
     """The streamed-boundary spec a bucket design is compiled from.
 
     ``zero``/``constant`` weave a constant (non-iterated) ``_mask`` input
@@ -278,20 +304,44 @@ def masked_spec(spec: StencilSpec) -> StencilSpec:
     so leading edges (always real) and trailing edges both see the
     clamped exterior of the real grid.
 
-    ``periodic`` threads nothing: the design is the plain zero-boundary
-    iteration of the bucket grid, and the wrapped exterior arrives as
-    host-streamed margin data (see :func:`bucket_margins`).  Masking
-    would zero the evolving halo, so the real region is recovered by
-    output slicing instead.
+    ``periodic`` threads nothing by default: the design is the plain
+    zero-boundary iteration of the bucket grid, and the wrapped exterior
+    arrives as host-streamed margin data (see :func:`bucket_margins`).
+    Masking would zero the evolving halo, so the real region is
+    recovered by output slicing instead.  With ``wrap_rounds`` set
+    (single-device narrow-margin serving) the spec additionally threads
+    per-dimension int32 **wrap-index** inputs and records them (plus the
+    round-depth cap) in ``wrap_index_inputs``/``wrap_round_depth``:
+    executors re-impose the wrap between fused rounds from the streamed
+    maps, so the margin shrinks from ``iterations * radius`` to
+    ``wrap_rounds * radius``.
 
     Raises for kernels no bucket transform can serve (division by
     streamed data — see :func:`check_bucketable`).
     """
     check_bucketable(spec)
     kind = spec.boundary.kind
+    if kind != "periodic" and wrap_rounds is not None:
+        raise ValueError(
+            f"wrap_rounds only applies to periodic boundaries, not "
+            f"{kind!r}"
+        )
     if kind == "periodic":
+        if wrap_rounds is None:
+            out = dataclasses.replace(
+                spec, name=spec.name + "@halo", boundary=ZERO_BOUNDARY
+            )
+            out.validate()
+            return out
+        wrap_rounds = max(int(wrap_rounds), 1)
+        widx = wrap_index_names(spec)
+        inputs = dict(spec.inputs)
+        for n in widx:
+            inputs[n] = ("int32", spec.shape)
         out = dataclasses.replace(
-            spec, name=spec.name + "@halo", boundary=ZERO_BOUNDARY
+            spec, name=spec.name + f"@wrap{wrap_rounds}",
+            boundary=ZERO_BOUNDARY, inputs=inputs,
+            wrap_index_inputs=widx, wrap_round_depth=wrap_rounds,
         )
         out.validate()
         return out
@@ -327,13 +377,17 @@ def masked_spec(spec: StencilSpec) -> StencilSpec:
     return out
 
 
-def bucket_spec(spec: StencilSpec, bucket_shape: Sequence[int]) -> StencilSpec:
+def bucket_spec(
+    spec: StencilSpec,
+    bucket_shape: Sequence[int],
+    wrap_rounds: int | None = None,
+) -> StencilSpec:
     """The streamed bucket-shaped spec a bucket design is compiled from.
 
     Per-request fit (grid + margins <= bucket) is validated by the bucket
     runner; the spec's own declared shape only contributes structure here.
     """
-    return masked_spec(with_shape(spec, bucket_shape))
+    return masked_spec(with_shape(spec, bucket_shape), wrap_rounds)
 
 
 # --------------------------------------------------------------------------
@@ -362,10 +416,37 @@ def halo_index_host(
 
     Cell value = the global bucket coordinate (along ``dim``) the cell
     copies from under the clamped-edge rule: identity below ``shape[dim]``,
-    the last real coordinate beyond it.
+    the last real coordinate beyond it.  A *clamp-form* map — the static
+    contract :func:`repro.kernels.blockops.streamed_halo_fixup` lowers to
+    slice/select ops instead of a gather.
     """
     shape, bucket_shape = tuple(shape), tuple(bucket_shape)
     idx = np.clip(np.arange(bucket_shape[dim]), 0, shape[dim] - 1)
+    view = idx.reshape(
+        tuple(-1 if d == dim else 1 for d in range(len(bucket_shape)))
+    )
+    return np.broadcast_to(view, bucket_shape).astype(np.int32)
+
+
+def wrap_index_host(
+    shape: Sequence[int],
+    bucket_shape: Sequence[int],
+    margin: int,
+    dim: int,
+) -> np.ndarray:
+    """Bucket-shaped int32 wrap-source map for dimension ``dim``.
+
+    Cell value = the bucket coordinate the cell copies from under the
+    periodic rule with the real grid placed at offset ``margin``:
+    identity on the real region ``[margin, margin + shape[dim])``,
+    wrapped into it (modulo the real size) everywhere else.  Consumed
+    between fused rounds by
+    :func:`repro.kernels.blockops.wrap_round_fixup` — a modular map, so
+    it stays a gather, once per round at grid granularity.
+    """
+    shape, bucket_shape = tuple(shape), tuple(bucket_shape)
+    S = shape[dim]
+    idx = margin + ((np.arange(bucket_shape[dim]) - margin) % S)
     view = idx.reshape(
         tuple(-1 if d == dim else 1 for d in range(len(bucket_shape)))
     )
@@ -435,6 +516,20 @@ class BucketPlan:
     margins: tuple[int, ...]          # leading placement offset per dim
     mask_name: str | None             # None for periodic (no mask woven)
     halo_idx_names: tuple[str, ...]   # per-dim index inputs (replicate)
+    wrap_idx_names: tuple[str, ...] = ()  # per-dim wrap maps (narrow periodic)
+    wrap_rounds: int | None = None    # round-depth cap (narrow periodic)
+    # per-(grid shape) placement index memo + build/reuse counters: a
+    # mixed-shape serving trace replays the same few shapes thousands of
+    # times and must not rebuild bucket-length index vectors per entry
+    # (and the batched/unbatched call sites must share one memo — only
+    # the batch slot differs).  Excluded from eq/hash/repr.
+    _place_index_cache: dict = dataclasses.field(
+        default_factory=dict, compare=False, repr=False
+    )
+    _place_stats: dict = dataclasses.field(
+        default_factory=lambda: {"builds": 0, "reuses": 0},
+        compare=False, repr=False,
+    )
 
     @property
     def fill(self) -> float:
@@ -444,7 +539,15 @@ class BucketPlan:
     def service_names(self) -> tuple[str, ...]:
         """The streamed non-data inputs of the bucket design, in order."""
         names = () if self.mask_name is None else (self.mask_name,)
-        return names + self.halo_idx_names
+        return names + self.halo_idx_names + self.wrap_idx_names
+
+    @property
+    def place_index_builds(self) -> int:
+        return self._place_stats["builds"]
+
+    @property
+    def place_index_reuses(self) -> int:
+        return self._place_stats["reuses"]
 
     def validate_shape(self, shape: Sequence[int]) -> tuple[int, ...]:
         """Check a request grid (plus its halo margins) fits the bucket."""
@@ -492,16 +595,36 @@ class BucketPlan:
             if tuple(a.shape[off:]) == self.bucket:
                 return a
             return np.pad(a, pads, constant_values=self.fill)
-        for d, b in enumerate(self.bucket):
-            s = a.shape[d + off]
-            if s == b:
-                continue
-            if kind == "replicate":
-                idx = np.clip(np.arange(b), 0, s - 1)
-            else:  # periodic: wrapped extension around the placed grid
-                idx = (np.arange(b) - self.margins[d]) % s
-            a = np.take(a, idx, axis=d + off)
+        for d, idx in enumerate(self._place_indices(tuple(a.shape[off:]))):
+            if idx is not None:
+                a = np.take(a, idx, axis=d + off)
         return a
+
+    def _place_indices(
+        self, shape: tuple[int, ...]
+    ) -> tuple[np.ndarray | None, ...]:
+        """Per-dimension placement index vectors for one grid shape,
+        memoized per plan (``None`` marks a full-size dim needing no
+        take).  Pure function of (shape, boundary mode); batched and
+        unbatched placements of the same grid hit the same entry."""
+        hit = self._place_index_cache.get(shape)
+        if hit is not None:
+            self._place_stats["reuses"] += 1
+            return hit
+        kind = self.spec.boundary.kind
+        out: list[np.ndarray | None] = []
+        for d, b in enumerate(self.bucket):
+            s = shape[d]
+            if s == b:
+                out.append(None)
+            elif kind == "replicate":
+                out.append(np.clip(np.arange(b), 0, s - 1))
+            else:  # periodic: wrapped extension around the placed grid
+                out.append((np.arange(b) - self.margins[d]) % s)
+        entry = tuple(out)
+        self._place_index_cache[shape] = entry
+        self._place_stats["builds"] += 1
+        return entry
 
     def service_entry(self, shape: Sequence[int]) -> dict[str, np.ndarray]:
         """The streamed service arrays (mask / halo indices) for one grid.
@@ -525,7 +648,7 @@ class BucketPlan:
         if self.mask_name is not None:
             dt = self.mspec.inputs[self.mask_name][0]
             out[self.mask_name] = np.zeros(self.bucket, np.dtype(dt))
-        for name in self.halo_idx_names:
+        for name in self.halo_idx_names + self.wrap_idx_names:
             out[name] = np.zeros(self.bucket, np.int32)
         return out
 
@@ -546,6 +669,8 @@ def _service_entry_cached(
         )
     for d, name in enumerate(plan.halo_idx_names):
         out[name] = halo_index_host(shape, plan.bucket, d)
+    for d, name in enumerate(plan.wrap_idx_names):
+        out[name] = wrap_index_host(shape, plan.bucket, plan.margins[d], d)
     return out
 
 
@@ -553,16 +678,28 @@ def bucket_plan(
     spec: StencilSpec,
     bucket_shape: Sequence[int],
     iterations: int | None = None,
+    wrap_rounds: int | None = None,
 ) -> BucketPlan:
-    """Build the host staging plan for ``spec`` served from ``bucket_shape``."""
+    """Build the host staging plan for ``spec`` served from ``bucket_shape``.
+
+    ``wrap_rounds`` (periodic only) switches the design to the
+    narrow-margin streamed-wrap form: the margin shrinks to
+    ``wrap_rounds * radius`` and per-dimension wrap maps join the
+    streamed service inputs (single-device executors only — see
+    :func:`masked_spec`).
+    """
     bucket = tuple(int(b) for b in bucket_shape)
-    mspec = bucket_spec(spec, bucket)
+    if spec.boundary.kind != "periodic":
+        wrap_rounds = None
+    mspec = bucket_spec(spec, bucket, wrap_rounds)
     kind = spec.boundary.kind
     return BucketPlan(
         spec=spec,
         bucket=bucket,
         mspec=mspec,
-        margins=bucket_margins(spec, iterations),
+        margins=bucket_margins(spec, iterations, wrap_rounds),
         mask_name=None if kind == "periodic" else mask_input_name(spec),
         halo_idx_names=mspec.halo_index_inputs,
+        wrap_idx_names=mspec.wrap_index_inputs,
+        wrap_rounds=wrap_rounds,
     )

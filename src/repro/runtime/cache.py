@@ -71,6 +71,8 @@ def structural_fingerprint(spec: StencilSpec) -> str:
         spec.iterate_input,
         spec.boundary,
         spec.halo_index_inputs,
+        spec.wrap_index_inputs,
+        spec.wrap_round_depth,
     ))
     return hashlib.sha1(payload.encode()).hexdigest()[:16]
 
@@ -485,17 +487,60 @@ class BucketedDesign:
         )
         self._evicted_stats: dict[tuple[int, ...], BucketStats] = {}
         self.evictions: int = 0
+        self._wrap_rounds = ...   # undecided until first routing
+
+    @property
+    def wrap_rounds(self) -> int | None:
+        """The narrow-margin wrap depth this registration serves with.
+
+        Decided once at first routing and pinned for the registration's
+        lifetime (margins are baked into bucket routing, so it cannot
+        change per request): ``None`` — the legacy wide
+        ``iterations * radius`` margin — unless the boundary is periodic
+        *and* the device pool is a single device (the between-round
+        re-wrap needs the whole grid resident; shard_map keeps the wide
+        margin until the collective re-wrap lands — see the TODO in
+        :mod:`repro.core.distribute`).  Otherwise the design-level
+        ranking for the declared shape picks the fusion depth ``s`` the
+        bucket designs will run, and the margin shrinks to
+        ``s * radius``.
+        """
+        if self._wrap_rounds is ...:
+            self._wrap_rounds = self._decide_wrap_rounds()
+        return self._wrap_rounds
+
+    def _decide_wrap_rounds(self) -> int | None:
+        if self.spec.boundary.kind != "periodic":
+            return None
+        n_avail = (
+            len(self.devices) if self.devices is not None
+            else len(jax.devices())
+        )
+        if n_avail > 1:
+            return None
+        it = (
+            self.spec.iterations if self.iterations is None
+            else self.iterations
+        )
+        tuned = self.cache.design(
+            self.spec, platform=self.platform, iterations=self.iterations,
+            devices=self.devices, clip_to_devices=True,
+        )
+        return max(min(tuned.ranking[0].config.s, it), 1)
 
     def bucket_for(self, shape: Sequence[int]) -> tuple[int, ...]:
         """The bucket serving a *request* grid of ``shape``.
 
         Routing fits the grid plus its per-dimension halo margins
         (non-zero only for periodic specs, whose wrapped exterior is
-        streamed into the margin as data — see
+        streamed into the margin as data; sized by this registration's
+        :attr:`wrap_rounds` — see
         :func:`repro.runtime.bucketing.bucket_margins`).
         """
         return self.bucketer.bucket_for(
-            padded_request_shape(self.spec, shape, self.iterations)
+            padded_request_shape(
+                self.spec, shape, self.iterations, self.wrap_rounds
+            )
         )
 
     def runner_for(self, shape: Sequence[int], count: int = 1) -> BucketEntry:
@@ -518,7 +563,7 @@ class BucketedDesign:
             entry.stats.requests += count
             self._entries.move_to_end(bucket)      # most recently hit
             return entry
-        bspec = bucket_spec(self.spec, bucket)
+        bspec = bucket_spec(self.spec, bucket, self.wrap_rounds)
         t0 = time.perf_counter()
         cached = self.cache.get_or_build(
             bspec, platform=self.platform, iterations=self.iterations,
@@ -529,6 +574,7 @@ class BucketedDesign:
         wrapped = build_bucket_runner(
             self.spec, bucket, cached.design.config,
             iterations=self.iterations, inner=cached.runner,
+            wrap_rounds=self.wrap_rounds,
         )
         # a previously evicted bucket resumes its archived counters
         stats = self._evicted_stats.pop(bucket, None) or BucketStats()

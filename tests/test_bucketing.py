@@ -610,8 +610,162 @@ def test_periodic_margin_routing_and_masked_spec_structure():
 
 
 # ---------------------------------------------------------------------------
-# LRU bucket eviction (max_buckets)
+# narrow periodic margins: wrap_rounds * radius instead of iterations * radius
 # ---------------------------------------------------------------------------
+
+
+def test_narrow_periodic_margin_structure():
+    """wrap_rounds switches the bucket design to the narrow streamed-wrap
+    form: margins shrink to wrap_rounds * radius, the compiled spec gains
+    one int32 wrap-index input per dimension and caps its fused depth."""
+    from repro.core.spec import Boundary
+    from repro.runtime import bucket_margins, padded_request_shape
+
+    it = 8
+    spec = _with_boundary(
+        stencils.jacobi2d(shape=(20, 13), iterations=it), Boundary("periodic")
+    )
+    assert bucket_margins(spec, it) == (8, 8)             # legacy wide
+    assert bucket_margins(spec, it, wrap_rounds=2) == (2, 2)
+    assert padded_request_shape(spec, (20, 13), it, 2) == (24, 17)
+    m = masked_spec(spec, wrap_rounds=2)
+    assert m.wrap_round_depth == 2
+    assert len(m.wrap_index_inputs) == 2
+    for n in m.wrap_index_inputs:
+        assert m.inputs[n][0] == "int32"
+    m.validate()
+    b = bucket_spec(spec, (32, 32), 2)
+    assert b.shape == (32, 32) and b.wrap_round_depth == 2
+    # narrow margins are a periodic-only notion
+    rep = _with_boundary(
+        stencils.jacobi2d(shape=(20, 13), iterations=it), Boundary("replicate")
+    )
+    with pytest.raises(ValueError, match="periodic"):
+        masked_spec(rep, wrap_rounds=2)
+
+
+@pytest.mark.parametrize("wrap_rounds", [1, 3])
+def test_narrow_periodic_bucket_matches_ref(wrap_rounds):
+    """Serving from the narrow margin (between-round re-wrap capping the
+    fused depth) must match the oracle even when wrap_rounds is far below
+    the iteration count."""
+    from repro.core.spec import Boundary
+    from repro.runtime import padded_request_shape
+
+    iters = 9
+    spec = _with_boundary(
+        stencils.get("jacobi2d", shape=(20, 13), iterations=iters),
+        Boundary("periodic"),
+    )
+    cfg = ParallelismConfig("temporal", k=1, s=3)
+    bucket = ShapeBucketer().bucket_for(
+        padded_request_shape(spec, (20, 13), iters, wrap_rounds)
+    )
+    run = build_bucket_runner(
+        spec, bucket, cfg, iterations=iters, tile_rows=8,
+        wrap_rounds=wrap_rounds,
+    )
+    arrays = batch_for(spec, B=2)
+    out = run(arrays)
+    assert out.shape == (2, 20, 13)
+    for b in range(2):
+        np.testing.assert_allclose(
+            out[b], oracle(spec, arrays, iters, b), rtol=2e-4, atol=2e-4,
+            err_msg=f"wrap_rounds={wrap_rounds}",
+        )
+
+
+def test_narrow_periodic_margin_actually_shrinks_routing():
+    """The point of the narrow margin: high-iteration periodic specs stop
+    routing to buckets inflated by iterations * radius."""
+    from repro.core.spec import Boundary
+    from repro.runtime import padded_request_shape
+
+    iters = 24
+    spec = _with_boundary(
+        stencils.jacobi2d(shape=(20, 13), iterations=iters),
+        Boundary("periodic"),
+    )
+    wide = ShapeBucketer().bucket_for(padded_request_shape(spec, (20, 13), iters))
+    narrow = ShapeBucketer().bucket_for(
+        padded_request_shape(spec, (20, 13), iters, 2)
+    )
+    assert np.prod(narrow) < np.prod(wide)
+
+
+def test_bucketed_design_wrap_rounds_decision():
+    """Registration decides wrap_rounds once: periodic single-device pins
+    it to the ranked fusion depth (capped at the iteration count, >= 1);
+    every other boundary keeps the legacy wide margin (None)."""
+    from repro.core.spec import Boundary
+
+    it = 6
+    periodic = _with_boundary(
+        stencils.jacobi2d(shape=(20, 13), iterations=it), Boundary("periodic")
+    )
+    cache = DesignCache()
+    bd = cache.bucketed(periodic, tile_rows=8, iterations=it)
+    wr = bd.wrap_rounds
+    ranked_s = cache.design(
+        periodic, iterations=it, clip_to_devices=True
+    ).ranking[0].config.s
+    assert wr == max(min(ranked_s, it), 1)
+    assert bd.wrap_rounds is wr                # pinned, not re-decided
+    for kind in ("zero", "replicate"):
+        other = _with_boundary(
+            stencils.jacobi2d(shape=(20, 13), iterations=it), Boundary(kind)
+        )
+        assert DesignCache().bucketed(other, tile_rows=8).wrap_rounds is None
+
+
+def test_narrow_periodic_end_to_end_through_cache():
+    """The registration-level path: bucket routing, the streamed-wrap
+    bucket design, and the wrap-index service inputs all agree."""
+    from repro.core.spec import Boundary
+
+    iters = 5
+    spec = _with_boundary(
+        stencils.jacobi2d(shape=(20, 13), iterations=iters),
+        Boundary("periodic"),
+    )
+    bd = DesignCache().bucketed(spec, tile_rows=8, iterations=iters)
+    entry = bd.runner_for((20, 13))
+    arrays = batch_for(spec, B=2)
+    out = entry.runner(arrays)
+    for b in range(2):
+        np.testing.assert_allclose(
+            out[b], oracle(spec, arrays, iters, b), rtol=2e-4, atol=2e-4,
+        )
+
+
+# ---------------------------------------------------------------------------
+# place_entry index-map memoization
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["replicate", "periodic"])
+def test_place_entry_indices_memoized_per_shape(kind):
+    """A serving trace replaying a few grid shapes must not rebuild the
+    bucket-sized placement index maps per request: one build per distinct
+    (shape, mode), every later placement a reuse — batched and unbatched
+    placements of the same grid sharing one entry."""
+    from repro.core.spec import Boundary
+    from repro.runtime.bucketing import bucket_plan
+
+    spec = _with_boundary(
+        stencils.jacobi2d(shape=(20, 13), iterations=2), Boundary(kind)
+    )
+    plan = bucket_plan(spec, (32, 32), iterations=2)
+    a = RNG.standard_normal((20, 13)).astype(np.float32)
+    b = RNG.standard_normal((18, 10)).astype(np.float32)
+    for _ in range(3):
+        plan.place_entry(a)
+        plan.place_entry(b)
+    plan.place_entry(a[None], batched=True)     # same shape via batched path
+    assert plan.place_index_builds == 2         # one per distinct shape
+    assert plan.place_index_reuses == 5
+    # identical results from build and reuse
+    np.testing.assert_array_equal(plan.place_entry(a), plan.place_entry(a))
 
 
 def test_lru_eviction_caps_ladder_and_preserves_counters():

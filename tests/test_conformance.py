@@ -35,8 +35,10 @@ import os
 import numpy as np
 import pytest
 
+import jax
 import jax.numpy as jnp
 
+from repro.kernels import pipeline, stencil
 from repro.core.spec import (
     BinOp,
     Boundary,
@@ -260,9 +262,20 @@ def check_seed(seed: int, pallas: bool) -> None:
     spec, arrays, iters = random_spec(seed)
     want = numpy_oracle(spec, arrays, iters)
     assert np.isfinite(want).all(), f"seed {seed}: oracle not finite"
+    check_case(spec, arrays, iters, want, pallas, f"seed {seed}")
+
+
+def check_case(
+    spec: StencilSpec,
+    arrays: dict,
+    iters: int,
+    want: np.ndarray,
+    pallas: bool,
+    label: str,
+) -> None:
     jarrays = {n: jnp.asarray(a) for n, a in arrays.items()}
     msg = (
-        f"seed {seed}: {spec.boundary.kind} {spec.ndim}-D "
+        f"{label}: {spec.boundary.kind} {spec.ndim}-D "
         f"{spec.shape} it={iters} r={spec.radius}"
     )
     # Scale-aware tolerance: random iterated kernels can amplify grid
@@ -319,6 +332,110 @@ def test_conformance_random_block(block):
 
 
 # ---------------------------------------------------------------------------
+# Batch-in-grid vs vmap: the tile-pipeline bitwise differential
+# ---------------------------------------------------------------------------
+
+# Folding the batch axis into the kernel grid changes *scheduling*, never
+# the computation — so the differential can demand far more than the
+# repo-wide executor tolerance:
+#
+#   * Pallas batch-in-grid vs ``jax.vmap(stencil_pallas)``: the kernel
+#     body is the identical traced function at identical block shapes
+#     (vmap adds the batch as a grid dimension, which is exactly what
+#     the batched kernel declares explicitly), so on CPU the results are
+#     **bitwise equal** — a plain allclose would let a subtly different
+#     trapezoid hide inside the tolerance.
+#   * jnp software pipeline vs ``jax.vmap`` of the per-entry tile loop:
+#     the tile *values* are the same, but the loop bodies are different
+#     HLO (double-buffer carry vs slice-per-step), and XLA-CPU's
+#     instruction selection may round division / mul-add chains
+#     differently per program by 1 ULP.  The bound is ULP-scale —
+#     orders of magnitude tighter than the executor tolerance — not
+#     exact.
+#
+# Off-CPU backends may legally re-fuse, so both gates degrade to the
+# repo tolerance there.
+BITWISE = jax.default_backend() == "cpu"
+ULP = float(np.finfo(np.float32).eps)
+
+
+def _assert_ulp_close(got, want, msg, n_ulp=4):
+    got, want = np.asarray(got), np.asarray(want)
+    if BITWISE:
+        bound = n_ulp * ULP * max(1.0, float(np.abs(want).max()))
+        diff = float(np.abs(got - want).max())
+        assert diff <= bound, f"{msg}: max diff {diff} > {n_ulp} ULP {bound}"
+    else:
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL,
+                                   err_msg=msg)
+
+
+def check_seed_batched(seed: int, pallas: bool, B: int = 3) -> None:
+    """Batch-in-grid executors vs ``jax.vmap`` of their per-entry twins."""
+    spec, arrays, _ = random_spec(seed)
+    rng = np.random.default_rng(seed + 10_000)
+    batched = {
+        n: np.stack([a] + [
+            rng.standard_normal(a.shape).astype(a.dtype)
+            for _ in range(B - 1)
+        ])
+        for n, a in arrays.items()
+    }
+    jbatched = {n: jnp.asarray(a) for n, a in batched.items()}
+    msg = f"seed {seed}: {spec.boundary.kind} {spec.ndim}-D {spec.shape}"
+
+    got = pipeline.stencil_jnp_pipeline(spec, jbatched, 2, tile_rows=4)
+    want = jax.vmap(
+        lambda one: pipeline.stencil_jnp_tiled(spec, one, 2, tile_rows=4)
+    )(jbatched)
+    _assert_ulp_close(got, want, f"{msg} [jnp pipeline vs vmap]")
+
+    if pallas:
+        got_pl = np.asarray(pipeline.stencil_pallas_batched(
+            spec, jbatched, 2, tile_rows=4, interpret=True
+        ))
+        want_pl = np.asarray(jax.vmap(
+            lambda one: stencil.stencil_pallas(
+                spec, one, 2, tile_rows=4, interpret=True
+            )
+        )(jbatched))
+        if BITWISE:
+            np.testing.assert_array_equal(
+                got_pl, want_pl,
+                err_msg=f"{msg} [pallas batch-in-grid vs vmap]",
+            )
+        else:
+            np.testing.assert_allclose(
+                got_pl, want_pl, rtol=RTOL, atol=ATOL,
+                err_msg=f"{msg} [pallas batch-in-grid vs vmap]",
+            )
+
+
+@pytest.mark.parametrize("block", range(N_BLOCKS))
+def test_batch_in_grid_matches_vmap_block(block):
+    for seed in range(block * BLOCK, (block + 1) * BLOCK):
+        check_seed_batched(seed, pallas=(seed % 8 == 0))
+
+
+def test_tile_pipeline_full_run_matches_oracle():
+    """stencil_run_batched (round loop + re-wrap handling) end to end
+    against the numpy oracle, both backends, all boundary modes."""
+    for seed in (0, 1, 2, 3):     # one seed per boundary mode
+        spec, arrays, iters = random_spec(seed)
+        want = np.stack([numpy_oracle(spec, arrays, iters)])
+        jbatched = {n: jnp.asarray(a)[None] for n, a in arrays.items()}
+        atol = ATOL * max(1.0, float(np.abs(want).max()))
+        for backend in ("jnp", "pallas"):
+            got = np.asarray(pipeline.stencil_run_batched(
+                spec, jbatched, iters, s=2, tile_rows=4, backend=backend,
+            ))
+            np.testing.assert_allclose(
+                got, want, rtol=RTOL, atol=atol,
+                err_msg=f"seed {seed} [{backend} tile pipeline]",
+            )
+
+
+# ---------------------------------------------------------------------------
 # Seed-pinned regression corpus
 # ---------------------------------------------------------------------------
 
@@ -370,12 +487,101 @@ except ImportError:     # the seed-pinned layers above still run
 
 if HAVE_HYPOTHESIS:
 
-    @given(seed=st.integers(min_value=1000, max_value=2**31 - 1))
-    def test_conformance_hypothesis_fuzz(seed):
+    # Structure-aware strategy: hypothesis draws the spec's *structure*
+    # (grid, arity, stages, expression tree, boundary) directly instead
+    # of an opaque generator seed.  A failing case therefore shrinks to
+    # a minimal spec — fewer inputs, a shallower expression, a smaller
+    # grid — rather than to an arbitrary seed that reproduces a huge one.
+
+    def _expr_strategy(readable, ndim, radius):
+        offsets = st.tuples(
+            *[st.integers(-radius, radius) for _ in range(ndim)]
+        )
+        tap = st.builds(Ref, st.sampled_from(readable), offsets)
+        const = st.builds(
+            lambda m: Num(m / 1000.0), st.integers(-2000, 2000)
+        )
+        leaf = st.one_of(tap, const)
+
+        def extend(inner):
+            return st.one_of(
+                st.builds(Neg, inner),
+                st.builds(
+                    BinOp, st.sampled_from("+-*"), inner, inner
+                ),
+                # division only by non-zero constants: division by
+                # streamed data is not bucketable by design
+                st.builds(
+                    lambda l, m: BinOp("/", l, Num(1.5 + m / 1000.0)),
+                    inner, st.integers(0, 2500),
+                ),
+                st.builds(
+                    lambda fn, args: Call(fn, tuple(args)),
+                    st.sampled_from(["max", "min"]),
+                    st.lists(inner, min_size=2, max_size=3),
+                ),
+                st.builds(lambda a: Call("abs", (a,)), inner),
+            )
+
+        # every stage must tap streamed data somewhere
+        expr = st.recursive(leaf, extend, max_leaves=8)
+        return expr.map(
+            lambda e: e if any(isinstance(n, Ref) for n in _walk(e))
+            else BinOp("+", e, Ref(readable[0], (0,) * ndim))
+        )
+
+    @st.composite
+    def conformance_cases(draw):
+        ndim = draw(st.sampled_from([2, 2, 2, 3]))
+        hi = 9 if ndim == 2 else 6
+        shape = tuple(
+            draw(st.integers(4, hi)) for _ in range(ndim)
+        )
+        radius = draw(st.integers(1, 2)) if ndim == 2 else 1
+        iterations = draw(st.integers(1, 3))
+        boundary = draw(st.sampled_from(BOUNDARIES))
+        n_inputs = draw(st.integers(1, 2))
+        inputs = {f"in_{i}": ("float32", shape) for i in range(n_inputs)}
+        iterate = f"in_{draw(st.integers(0, n_inputs - 1))}"
+        readable = list(inputs)
+        stages = []
+        if draw(st.booleans()):
+            stages.append(Stage(
+                "tmp", "float32",
+                draw(_expr_strategy(readable, ndim, 1)), False,
+            ))
+            readable.append("tmp")
+        stages.append(Stage(
+            "out", "float32",
+            draw(_expr_strategy(readable, ndim, radius)), True,
+        ))
+        spec = StencilSpec(
+            name="CONF-HYP",
+            iterations=iterations,
+            inputs=inputs,
+            stages=tuple(stages),
+            iterate_input=iterate,
+            boundary=boundary,
+        )
+        spec.validate()
+        rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+        arrays = {
+            n: rng.standard_normal(shape).astype(np.float32)
+            for n in inputs
+        }
+        return spec, arrays, iterations
+
+    @given(case=conformance_cases())
+    def test_conformance_hypothesis_fuzz(case):
         # restrict to the cheap executors so the nightly profile's
         # example count buys breadth; pallas depth comes from the pinned
         # layers
-        check_seed(seed, pallas=False)
+        spec, arrays, iters = case
+        want = numpy_oracle(spec, arrays, iters)
+        # iterated random products can overflow float32 — not a
+        # conformance question
+        hypothesis.assume(np.isfinite(want).all())
+        check_case(spec, arrays, iters, want, pallas=False, label="hyp")
 
 else:
 
