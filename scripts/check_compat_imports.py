@@ -1,0 +1,138 @@
+#!/usr/bin/env python
+"""Repo lint: version-sensitive jax APIs live only in src/repro/compat.py.
+
+The ROADMAP's version policy pins every jax surface that moved between
+0.4.x and current releases behind one shim module, so a jax upgrade is a
+one-file change.  This ast-based check enforces it: outside compat.py no
+module may
+
+  * import ``shard_map`` from jax (``from jax import shard_map``,
+    ``from jax.experimental.shard_map import ...``), or touch
+    ``jax.experimental.shard_map`` / ``jax.shard_map`` attributes;
+  * use ``lax.pcast`` / ``lax.pvary`` (the replication-typing rename);
+  * build element-indexed BlockSpecs directly (``pl.Element``,
+    ``pl.Unblocked``, or an ``indexing_mode=`` keyword) instead of
+    ``repro.compat.element_block_spec``;
+  * pass ``check_rep=``/``check_vma=`` to anything that was not
+    imported from ``repro.compat`` (the shim normalises the kwarg name).
+
+Exit 1 with file:line findings on violation, 0 when clean.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples", "scripts")
+ALLOWED = {ROOT / "src" / "repro" / "compat.py"}
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of an attribute/name chain."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    tree = ast.parse(path.read_text(), filename=str(path))
+    rel = path.relative_to(ROOT)
+    findings: list[str] = []
+    compat_names: set[str] = set()
+
+    def flag(node: ast.AST, msg: str) -> None:
+        findings.append(f"{rel}:{node.lineno}: {msg}")
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if mod == "repro.compat" or mod.endswith(".compat"):
+                compat_names.update(a.asname or a.name for a in node.names)
+                continue
+            if mod.startswith("jax"):
+                for a in node.names:
+                    if a.name == "shard_map" or "shard_map" in mod:
+                        flag(node, (
+                            f"direct shard_map import from {mod!r}; use "
+                            "repro.compat.shard_map"
+                        ))
+                    if a.name in ("pcast", "pvary"):
+                        flag(node, (
+                            f"direct {a.name} import from {mod!r}; use "
+                            "repro.compat.pvary"
+                        ))
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                if "shard_map" in a.name:
+                    flag(node, (
+                        f"direct import of {a.name!r}; use "
+                        "repro.compat.shard_map"
+                    ))
+        elif isinstance(node, ast.Attribute):
+            dotted = _dotted(node)
+            if dotted.endswith("experimental.shard_map") or dotted in (
+                "jax.shard_map",
+            ):
+                flag(node, (
+                    f"direct use of {dotted}; use repro.compat.shard_map"
+                ))
+            elif node.attr in ("pcast", "pvary") and dotted.startswith(
+                ("lax.", "jax.lax.")
+            ):
+                flag(node, (
+                    f"direct use of {dotted}; use repro.compat.pvary"
+                ))
+            elif node.attr in ("Element", "Unblocked") and dotted.split(
+                "."
+            )[0] in ("pl", "pallas") or dotted.endswith(
+                ("pallas.Element", "pallas.Unblocked")
+            ):
+                flag(node, (
+                    f"direct use of {dotted}; use "
+                    "repro.compat.element_block_spec"
+                ))
+        elif isinstance(node, ast.Call):
+            callee = _dotted(node.func)
+            for kw in node.keywords:
+                if kw.arg == "indexing_mode":
+                    flag(node, (
+                        "indexing_mode= BlockSpec keyword; use "
+                        "repro.compat.element_block_spec"
+                    ))
+                elif kw.arg in ("check_rep", "check_vma") and (
+                    callee.split(".")[0] not in compat_names
+                ):
+                    flag(node, (
+                        f"{kw.arg}= passed to {callee or '<call>'}, which "
+                        "is not the repro.compat.shard_map shim"
+                    ))
+    return findings
+
+
+def main() -> int:
+    findings: list[str] = []
+    for d in SCAN_DIRS:
+        base = ROOT / d
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            if path in ALLOWED:
+                continue
+            findings.extend(check_file(path))
+    for f in findings:
+        print(f)
+    print(
+        "check_compat_imports:",
+        "OK" if not findings else f"{len(findings)} violation(s)",
+    )
+    return 0 if not findings else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

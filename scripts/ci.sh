@@ -24,6 +24,16 @@ else
   python -m compileall -q src tests benchmarks examples scripts
 fi
 
+echo "== lint: compat imports =="
+# ast-based version-policy guard: version-sensitive jax APIs (shard_map,
+# check_rep/check_vma, element-indexed BlockSpecs) only via repro/compat.py
+python scripts/check_compat_imports.py
+
+echo "== lint: stock kernels + example DSL =="
+# static analyzer gate: every stock kernel x 4 boundary modes and every
+# example DSL source must verify with zero error-severity diagnostics
+python scripts/lint_stencils.py
+
 echo "== slow-marker audit =="
 # static guard: subprocess suites stay slow-marked, the conformance
 # suite's hypothesis profile stays CI-capped, and the pinned random-spec

@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""CI gate: every stock kernel and example DSL source verifies clean.
+
+Three sweeps, all through the static analyzer (repro.core.analysis):
+
+  1. every stock kernel in repro.configs.stencils across ALL FOUR
+     boundary modes (zero / constant / replicate / periodic), verified
+     both as a spec and as DSL text re-emitted by format_spec (which
+     also exercises the parser round-trip and source spans);
+  2. every DSL string literal embedded in examples/*.py (found by an
+     ast scan for literals containing a ``kernel:`` header);
+  3. every standalone ``*.dsl`` file under examples/, if any.
+
+The gate fails on any error-severity diagnostic; warnings and infos are
+printed but do not fail (hygiene findings are advisory).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.configs import stencils                      # noqa: E402
+from repro.core import analysis, dsl                    # noqa: E402
+from repro.core.spec import Boundary                    # noqa: E402
+
+BOUNDARIES = (
+    Boundary("zero"),
+    Boundary("constant", 1.5),
+    Boundary("replicate"),
+    Boundary("periodic"),
+)
+
+
+def gate(label: str, diags, source=None) -> bool:
+    errors = [d for d in diags if d.is_error]
+    for d in analysis.sort_diagnostics(diags):
+        print(f"{label}: {d.format(source)}")
+    if errors:
+        print(f"FAIL {label}: {len(errors)} error diagnostic(s)")
+        return False
+    return True
+
+
+def dsl_literals(py_path: pathlib.Path) -> list[str]:
+    """String literals in a Python file that look like DSL kernels."""
+    tree = ast.parse(py_path.read_text(), filename=str(py_path))
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            if "kernel:" in node.value and "output" in node.value:
+                out.append(node.value)
+    return out
+
+
+def main() -> int:
+    ok = True
+    shapes = {2: (64, 32), 3: (32, 16, 16)}
+
+    for name, fn in stencils.BENCHMARKS.items():
+        base = fn(iterations=4)
+        spec = fn(shape=shapes[base.ndim], iterations=4)
+        for boundary in BOUNDARIES:
+            sp = dataclasses.replace(spec, boundary=boundary)
+            sp.validate()
+            label = f"stock:{name}:{boundary.kind}"
+            ok &= gate(label, analysis.verify(sp))
+            # re-emitted DSL text must lint clean too (round-trip + spans)
+            text = dsl.format_spec(sp)
+            parsed, diags = analysis.lint_text(text)
+            ok &= gate(label + ":text", diags, source=text)
+            if parsed is not None and parsed != sp:
+                print(f"FAIL {label}: format_spec round-trip mismatch")
+                ok = False
+
+    examples = ROOT / "examples"
+    for py in sorted(examples.glob("*.py")):
+        for i, text in enumerate(dsl_literals(py)):
+            _, diags = analysis.lint_text(text)
+            ok &= gate(f"{py.name}[{i}]", diags, source=text)
+    for f in sorted(examples.glob("*.dsl")):
+        _, diags = analysis.lint_text(f.read_text())
+        ok &= gate(f.name, diags, source=f.read_text())
+
+    print("lint_stencils:", "OK" if ok else "FAILED")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,10 +1,19 @@
 """SASA core: stencil DSL, analytical model, auto-tuned distributed execution."""
-from repro.core import dsl, model, platform
+from repro.core import analysis, dsl, model, platform
+from repro.core.analysis import (
+    Diagnostic,
+    VerificationError,
+    lint_text,
+    verify,
+    verify_or_raise,
+)
 from repro.core.autotune import TunedDesign, autotune, soda_baseline
 from repro.core.model import ParallelismConfig, Prediction, choose_best
 from repro.core.spec import StencilSpec
 
 __all__ = [
-    "dsl", "model", "platform", "autotune", "soda_baseline", "TunedDesign",
-    "ParallelismConfig", "Prediction", "choose_best", "StencilSpec",
+    "analysis", "dsl", "model", "platform", "autotune", "soda_baseline",
+    "TunedDesign", "ParallelismConfig", "Prediction", "choose_best",
+    "StencilSpec", "Diagnostic", "VerificationError", "lint_text",
+    "verify", "verify_or_raise",
 ]

@@ -17,7 +17,11 @@ the front end and everything else:
      tiles — compiled from the *optimized* expression trees;
   5. if a config is infeasible on the actual device pool (e.g. halo or
      boundary constraint), fall back to the next-best candidate — the
-     paper's "build next best design" retry loop.
+     paper's "build next best design" retry loop.  Since the static
+     analyzer (:mod:`repro.core.analysis`) mirrors every runtime guard,
+     the loop consumes a precomputed feasibility verdict table: known-
+     infeasible candidates are skipped without a build attempt and every
+     skip is recorded as a diagnostic on the returned design.
 """
 from __future__ import annotations
 
@@ -25,7 +29,8 @@ import dataclasses
 
 import jax
 
-from repro.core import dsl, model
+from repro.core import analysis, dsl, model
+from repro.core.analysis import Diagnostic
 from repro.core.distribute import build_runner
 from repro.core.ir import PassReport, lower
 from repro.core.model import ParallelismConfig, Prediction
@@ -40,6 +45,9 @@ class TunedDesign:
     ranking: list[Prediction]
     runner: object  # callable(arrays) -> np.ndarray
     lowering: tuple[PassReport, ...] = ()  # per-pass op-delta report
+    # static-analysis findings from tuning: infeasible-candidate skips
+    # (SASA30x), unpredicted build refusals (SASA308), strict-mode output
+    diagnostics: tuple[Diagnostic, ...] = ()
 
     @property
     def config(self) -> ParallelismConfig:
@@ -55,8 +63,15 @@ def autotune(
     tile_rows: int = 64,
     cache=None,
     bucket=False,
+    strict: bool = False,
 ) -> TunedDesign:
     """The SASA entry point: DSL text (or parsed spec) -> optimized runner.
+
+    With ``strict`` the spec is verified first and any error-severity
+    diagnostic (division unsafety, no feasible candidate, ...) raises
+    :class:`repro.core.analysis.VerificationError` before anything
+    compiles; without it, analysis findings ride along on
+    ``TunedDesign.diagnostics``.
 
     Pass a :class:`repro.runtime.DesignCache` as ``cache`` to memoize both
     the ranking and the jitted runner across calls (serving entry points
@@ -71,16 +86,21 @@ def autotune(
     sizes share a bucket share one compiled design (multi-geometry
     serving; see :mod:`repro.runtime.bucketing`).
     """
+    spec_in = (
+        source_or_spec
+        if isinstance(source_or_spec, StencilSpec)
+        else dsl.parse(source_or_spec)
+    )
+    if strict:
+        analysis.verify_or_raise(
+            spec_in, platform=platform, iterations=iterations,
+        )
     if bucket:
         if cache is None:
             raise ValueError("autotune(bucket=...) requires cache=")
         from repro.runtime.bucketing import ShapeBucketer
 
-        spec = (
-            source_or_spec
-            if isinstance(source_or_spec, StencilSpec)
-            else dsl.parse(source_or_spec)
-        )
+        spec = spec_in
         bucketer = bucket if isinstance(bucket, ShapeBucketer) else None
         bd = cache.bucketed(
             spec, bucketer=bucketer, platform=platform,
@@ -109,23 +129,21 @@ def autotune(
             )
             return out[0]
 
-        return TunedDesign(spec, inner.prediction, inner.ranking, runner)
+        return TunedDesign(
+            spec, inner.prediction, inner.ranking, runner,
+            diagnostics=getattr(inner, "diagnostics", ()),
+        )
     if cache is not None:
         if not build:
             return cache.design(
-                source_or_spec, platform=platform, iterations=iterations,
+                spec_in, platform=platform, iterations=iterations,
                 devices=devices,
             )
         return cache.get_or_build(
-            source_or_spec, platform=platform, iterations=iterations,
+            spec_in, platform=platform, iterations=iterations,
             devices=devices, tile_rows=tile_rows, batched=False,
         ).design
-    spec = (
-        source_or_spec
-        if isinstance(source_or_spec, StencilSpec)
-        else dsl.parse(source_or_spec)
-    )
-    lowered = lower(spec)
+    lowered = lower(spec_in)
     spec = lowered.spec  # ranking AND executors consume the optimized trees
     if platform is None:
         n_avail = len(devices) if devices is not None else len(jax.devices())
@@ -136,20 +154,53 @@ def autotune(
     ranking = model.choose_best(
         spec, platform, iterations=iterations, optimize=False
     )
+    # Static feasibility preflight mirrors build_runner's guards, so the
+    # paper's "build next best design" retry loop consults a verdict
+    # table instead of rediscovering each refusal as a ValueError.  Every
+    # skip is kept as a diagnostic instead of being silently swallowed.
+    n_pool = len(devices) if devices is not None else len(jax.devices())
+    verdicts = analysis.preflight(
+        spec, [p.config for p in ranking], n_pool, iterations=iterations,
+        k_override=len(devices) if devices is not None else None,
+    )
+    if not build:
+        return TunedDesign(
+            spec, ranking[0], ranking, None, lowered.reports,
+            tuple(
+                v.diagnostic("info") for v in verdicts if not v.feasible
+            ),
+        )
+    diags: list[Diagnostic] = []
     last_err = None
-    for pred in ranking:
+    for pred, verdict in zip(ranking, verdicts):
         runner = None
         if build:
+            if not verdict.feasible:
+                diags.append(verdict.diagnostic("info"))
+                last_err = verdict.reason
+                continue
             try:
                 runner = build_runner(
                     spec, pred.config, iterations=iterations,
                     devices=devices, tile_rows=tile_rows,
                 )
-            except ValueError as e:  # infeasible on the actual pool: retry
+            except ValueError as e:  # a guard preflight did not predict
+                diags.append(Diagnostic(
+                    "SASA308", "info",
+                    f"candidate {pred.config} refused at build time: {e}",
+                ))
                 last_err = e
                 continue
-        return TunedDesign(spec, pred, ranking, runner, lowered.reports)
-    raise RuntimeError(f"no feasible configuration: {last_err}")
+        return TunedDesign(
+            spec, pred, ranking, runner, lowered.reports, tuple(diags),
+        )
+    raise RuntimeError(
+        f"no feasible configuration: {last_err}"
+        + (
+            "\n" + "\n".join(d.format() for d in diags)
+            if diags else ""
+        )
+    )
 
 
 def soda_baseline(
@@ -189,17 +240,35 @@ def soda_baseline(
         )
     if not build:
         return TunedDesign(spec, cands[0], cands, None, lowered.reports)
-    # same "build next best design" retry loop as autotune(): an
-    # infeasible temporal config falls back to the next candidate
+    # same verdict-driven retry loop as autotune(): a statically
+    # infeasible temporal config (e.g. a wrap-margin spec on a shard
+    # pool) is skipped with a diagnostic, unpredicted build refusals
+    # fall back to the next candidate
+    n_pool = len(devices) if devices is not None else len(jax.devices())
+    verdicts = analysis.preflight(
+        spec, [p.config for p in cands], n_pool, iterations=iterations,
+        k_override=len(devices) if devices is not None else None,
+    )
+    diags: list[Diagnostic] = []
     last_err = None
-    for pred in cands:
+    for pred, verdict in zip(cands, verdicts):
+        if not verdict.feasible:
+            diags.append(verdict.diagnostic("info"))
+            last_err = verdict.reason
+            continue
         try:
             runner = build_runner(
                 spec, pred.config, iterations=iterations, devices=devices,
                 tile_rows=tile_rows,
             )
         except ValueError as e:
+            diags.append(Diagnostic(
+                "SASA308", "info",
+                f"candidate {pred.config} refused at build time: {e}",
+            ))
             last_err = e
             continue
-        return TunedDesign(spec, pred, cands, runner, lowered.reports)
+        return TunedDesign(
+            spec, pred, cands, runner, lowered.reports, tuple(diags),
+        )
     raise RuntimeError(f"no feasible temporal configuration: {last_err}")

@@ -57,16 +57,30 @@ Pass = Callable[[Expr], Expr]
 def _map_children(expr: Expr, fn: Pass) -> Expr:
     """Rebuild one node with ``fn`` applied to each child."""
     if isinstance(expr, BinOp):
-        return BinOp(expr.op, fn(expr.lhs), fn(expr.rhs))
+        return BinOp(expr.op, fn(expr.lhs), fn(expr.rhs), span=expr.span)
     if isinstance(expr, Call):
-        return Call(expr.fn, tuple(fn(a) for a in expr.args))
+        return Call(expr.fn, tuple(fn(a) for a in expr.args), span=expr.span)
     if isinstance(expr, Neg):
-        return Neg(fn(expr.arg))
+        return Neg(fn(expr.arg), span=expr.span)
     if isinstance(expr, Let):
         return Let(
-            tuple((n, fn(e)) for n, e in expr.bindings), fn(expr.body)
+            tuple((n, fn(e)) for n, e in expr.bindings), fn(expr.body),
+            span=expr.span,
         )
     return expr  # Num, Ref, Var
+
+
+def _keep_span(new: Expr, old: Expr) -> Expr:
+    """Carry the rewritten node's source span onto its replacement.
+
+    Spans are excluded from structural equality, so passes would silently
+    drop them; a folded/simplified node inherits the location of the
+    expression it replaced, keeping analyzer diagnostics pointable after
+    lowering.
+    """
+    if new is not old and new.span is None and old.span is not None:
+        return dataclasses.replace(new, span=old.span)
+    return new
 
 
 def _bottom_up(expr: Expr, rule: Pass) -> Expr:
@@ -78,7 +92,7 @@ def _bottom_up(expr: Expr, rule: Pass) -> Expr:
     """
     e = _map_children(expr, lambda c: _bottom_up(c, rule))
     while True:
-        e2 = rule(e)
+        e2 = _keep_span(rule(e), e)
         if e2 == e:
             return e
         e = e2

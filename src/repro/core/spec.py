@@ -25,6 +25,37 @@ from typing import Callable, Mapping, Union
 import numpy as np
 
 # --------------------------------------------------------------------------
+# Source spans
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SourceSpan:
+    """Location of a construct in the DSL text (1-based line / column).
+
+    Attached to AST nodes by the parser and carried into diagnostics
+    (:mod:`repro.core.analysis`).  For a logical line assembled from
+    continuation lines, ``line`` is the first raw line and columns index
+    into the joined text.
+    """
+
+    line: int
+    col: int
+    end_col: int
+
+    def __str__(self) -> str:
+        return f"{self.line}:{self.col}"
+
+
+# The span field rides every AST node but is excluded from equality,
+# hashing, and repr: structural identity (spec hashing, CSE's repeated-
+# subtree table, repr-based cache fingerprints, parse/format round-trip
+# equality) must not depend on where a node came from.
+def _span_field():
+    return dataclasses.field(default=None, compare=False, repr=False)
+
+
+# --------------------------------------------------------------------------
 # Expression AST
 # --------------------------------------------------------------------------
 
@@ -32,6 +63,7 @@ import numpy as np
 @dataclasses.dataclass(frozen=True)
 class Num:
     value: float
+    span: "SourceSpan | None" = _span_field()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,6 +72,7 @@ class Ref:
 
     name: str
     offsets: tuple[int, ...]
+    span: "SourceSpan | None" = _span_field()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +80,7 @@ class BinOp:
     op: str  # '+', '-', '*', '/'
     lhs: "Expr"
     rhs: "Expr"
+    span: "SourceSpan | None" = _span_field()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,11 +89,13 @@ class Call:
 
     fn: str
     args: tuple["Expr", ...]
+    span: "SourceSpan | None" = _span_field()
 
 
 @dataclasses.dataclass(frozen=True)
 class Neg:
     arg: "Expr"
+    span: "SourceSpan | None" = _span_field()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +103,7 @@ class Var:
     """Reference to a value bound by an enclosing :class:`Let`."""
 
     name: str
+    span: "SourceSpan | None" = _span_field()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,6 +119,7 @@ class Let:
 
     bindings: tuple[tuple[str, "Expr"], ...]
     body: "Expr"
+    span: "SourceSpan | None" = _span_field()
 
 
 Expr = Union[Num, Ref, BinOp, Call, Neg, Var, Let]
@@ -195,6 +233,7 @@ class Stage:
     dtype: str
     expr: Expr
     is_output: bool
+    span: "SourceSpan | None" = _span_field()
 
     @property
     def radius(self) -> int:

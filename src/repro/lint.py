@@ -1,0 +1,69 @@
+"""Command-line DSL linter: ``python -m repro.lint kernel.dsl [...]``.
+
+Runs the static verifier (:mod:`repro.core.analysis`) over DSL files —
+or stdin with ``-`` — and prints structured diagnostics with source
+spans and caret markers:
+
+    kernel.dsl:5:26 error[SASA301]: stage 'out' divides by streamed ...
+      output float: out(0,0) = in(0,0) / in(0,1)
+                               ^^^^^^^^^^^^^^^^
+
+Exit status is 1 if any error-severity diagnostic was produced (or any
+warning under ``--werror``), 0 otherwise — suitable for CI gating (see
+scripts/lint_stencils.py, which lints the stock kernel suite).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.core import analysis
+
+
+def lint_source(
+    text: str, label: str = "<stdin>", werror: bool = False, out=sys.stdout
+) -> bool:
+    """Lint one DSL text; print findings; True iff it gates clean."""
+    _, diags = analysis.lint_text(text)
+    for d in analysis.sort_diagnostics(diags):
+        rendered = d.format(text)
+        first, sep, rest = rendered.partition("\n")
+        print(f"{label}:{first}", file=out)
+        if sep:
+            print(rest, file=out)
+    failing = [
+        d for d in diags
+        if d.is_error or (werror and d.severity == "warning")
+    ]
+    return not failing
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="statically verify SASA stencil DSL files",
+    )
+    parser.add_argument(
+        "files", nargs="+",
+        help="DSL files to lint ('-' reads one kernel from stdin)",
+    )
+    parser.add_argument(
+        "--werror", action="store_true",
+        help="treat warnings as gate failures",
+    )
+    args = parser.parse_args(argv)
+    ok = True
+    for path in args.files:
+        if path == "-":
+            text = sys.stdin.read()
+            label = "<stdin>"
+        else:
+            with open(path, "r", encoding="utf-8") as f:
+                text = f.read()
+            label = path
+        ok &= lint_source(text, label=label, werror=args.werror)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

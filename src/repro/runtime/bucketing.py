@@ -71,26 +71,28 @@ mode is bucketable, each by the streaming trick that fits its semantics:
                   the TODO in :mod:`repro.core.distribute`).
 
 Kernels whose padding cells could compute non-finite values (a division
-by streamed data: 0/0 or x/0 would survive the mask multiply as NaN) are
-rejected at transform time — see :func:`check_bucketable`; serve those
-exact-shape.
+whose divisor interval contains zero: 0/0 or x/0 would survive the mask
+multiply as NaN) are rejected at transform time by the static analyzer —
+see :func:`repro.core.analysis.require_bucketable`; serve those
+exact-shape.  Divisors provably bounded away from zero (constants,
+``abs(...) + c``) are admitted.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Sequence
 
 import numpy as np
 
+from repro.core.analysis import require_bucketable
 from repro.core.spec import (
     BinOp,
     Num,
     Ref,
     StencilSpec,
     ZERO_BOUNDARY,
-    refs_in,
-    walk,
 )
 
 
@@ -215,30 +217,24 @@ def wrap_index_names(spec: StencilSpec) -> tuple[str, ...]:
 
 
 def check_bucketable(spec: StencilSpec) -> None:
-    """Reject specs the streamed bucket transforms cannot serve bit-exactly.
+    """Deprecated: use :func:`repro.core.analysis.require_bucketable`.
 
-    Bucket padding relies on ``x * 0.0 == 0.0`` (mask modes) and on
-    finite don't-care cells (halo modes), both of which fail for
-    ``x`` = inf/NaN.  Padding cells can hold zeros, so a stage that
-    *divides by streamed data* (any array reference in a denominator) can
-    produce 0/0 or x/0 on the padding; the resulting NaN survives the
-    mask multiply and bleeds into the real grid on the next iteration.
-    Such kernels must be served exact-shape (division by constants —
-    every kernel in the benchmark suite — is fine).
+    Historically this refused *any* array reference in a denominator
+    syntactically.  The static analyzer's interval domain now proves
+    divisors nonzero instead — admitting provably-safe kernels like
+    ``x / (abs(y) + 2)`` that the syntactic rule rejected — so this shim
+    just delegates and warns.  Raises the same ``ValueError`` family
+    (:class:`repro.core.analysis.VerificationError`) for kernels whose
+    divisor interval contains zero.
     """
-    for stage in spec.stages:
-        for node in walk(stage.expr):
-            if isinstance(node, BinOp) and node.op == "/":
-                denom_refs = refs_in(node.rhs)
-                if denom_refs:
-                    names = sorted({r.name for r in denom_refs})
-                    raise ValueError(
-                        f"spec {spec.name!r} stage {stage.name!r} divides "
-                        f"by streamed data ({', '.join(names)}): zero "
-                        "padding would produce non-finite values that "
-                        "survive the exterior mask, so this kernel cannot "
-                        "be shape-bucketed — serve it exact-shape instead"
-                    )
+    warnings.warn(
+        "check_bucketable is deprecated; use "
+        "repro.core.analysis.require_bucketable (interval-based division "
+        "safety) instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    require_bucketable(spec)
 
 
 def boundary_fill(spec: StencilSpec) -> float:
@@ -316,10 +312,11 @@ def masked_spec(
     maps, so the margin shrinks from ``iterations * radius`` to
     ``wrap_rounds * radius``.
 
-    Raises for kernels no bucket transform can serve (division by
-    streamed data — see :func:`check_bucketable`).
+    Raises for kernels no bucket transform can serve (a divisor whose
+    value interval contains zero — see
+    :func:`repro.core.analysis.require_bucketable`).
     """
-    check_bucketable(spec)
+    require_bucketable(spec)
     kind = spec.boundary.kind
     if kind != "periodic" and wrap_rounds is not None:
         raise ValueError(

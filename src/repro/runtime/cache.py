@@ -34,7 +34,8 @@ from typing import Mapping, Sequence
 
 import jax
 
-from repro.core import dsl
+from repro.core import analysis, dsl
+from repro.core.analysis import Diagnostic, require_bucketable
 from repro.core.autotune import TunedDesign, autotune
 from repro.core.distribute import build_runner
 from repro.core.model import ParallelismConfig
@@ -49,7 +50,6 @@ from repro.runtime.batching import (
 from repro.runtime.bucketing import (
     ShapeBucketer,
     bucket_spec,
-    check_bucketable,
     padded_request_shape,
 )
 
@@ -292,14 +292,30 @@ class DesignCache:
             clip_to_devices=True,   # an executor is built: rank what fits
         )
         # feasibility retry loop (paper's "build next best design"): the
-        # cached runner level memoizes per-config, so a config that built
-        # once keeps winning without re-trying the infeasible ones.  The
+        # static preflight mirrors the runtime guards, so known-infeasible
+        # candidates are skipped without touching the runner level (and
+        # recorded as diagnostics); the cached runner level memoizes
+        # per-config, so a config that built once keeps winning.  The
         # runner compiles ``tuned.spec`` — the IR-lowered trees the model
         # ranked — not the raw input spec.
+        n_pool = len(devices) if devices is not None else len(jax.devices())
+        verdicts = analysis.preflight(
+            tuned.spec, [p.config for p in tuned.ranking], n_pool,
+            iterations=iterations, batched=batched,
+            k_override=(
+                len(devices)
+                if devices is not None and not batched else None
+            ),
+        )
+        diags: list[Diagnostic] = []
         last_err = None
         run = None
         chosen = None
-        for pred in tuned.ranking:
+        for pred, verdict in zip(tuned.ranking, verdicts):
+            if not verdict.feasible:
+                diags.append(verdict.diagnostic("info"))
+                last_err = verdict.reason
+                continue
             try:
                 run = self.runner(
                     tuned.spec, pred.config, iterations=iterations,
@@ -309,11 +325,16 @@ class DesignCache:
                 chosen = pred
                 break
             except ValueError as e:
+                diags.append(Diagnostic(
+                    "SASA308", "info",
+                    f"candidate {pred.config} refused at build time: {e}",
+                ))
                 last_err = e
         if run is None:
             raise RuntimeError(f"no feasible configuration: {last_err}")
         design = TunedDesign(
-            tuned.spec, chosen, tuned.ranking, run, tuned.lowering
+            tuned.spec, chosen, tuned.ranking, run, tuned.lowering,
+            tuple(diags),
         )
         return CachedDesign(
             design=design, runner=run, fingerprint=fp,
@@ -354,12 +375,16 @@ class DesignCache:
         via the streamed mask, replicate via streamed halo-index gathers,
         periodic via host-streamed wrap margins (docs/DESIGN.md
         §Boundaries × bucketed serving); only kernels no streamed bucket
-        transform can serve bit-exactly (division by streamed data) are
-        refused here, at registration time (see
-        :func:`repro.runtime.bucketing.check_bucketable`).
+        transform can serve bit-exactly (a divisor interval containing
+        zero) are refused here, at registration time (see
+        :func:`repro.core.analysis.require_bucketable`).  With
+        ``strict`` the full static verification suite runs too and any
+        error-severity diagnostic refuses the registration.
         """
         spec = _as_spec(source_or_spec)
-        check_bucketable(spec)   # refuse un-bucketable kernels loudly, now
+        require_bucketable(spec)  # refuse un-bucketable kernels loudly, now
+        if strict:
+            analysis.verify_or_raise(spec, iterations=iterations)
         return BucketedDesign(
             cache=self,
             spec=spec,

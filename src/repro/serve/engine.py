@@ -114,6 +114,9 @@ class _Registered:
     cached: object          # runtime CachedDesign, or BucketedDesign
     counters: DesignCounters
     iterations: int | None = None      # as passed at register time
+    # static-analysis findings from registration-time verification
+    # (repro.core.analysis.Diagnostic tuples; empty = clean)
+    diagnostics: tuple = ()
 
     @property
     def bucketed(self) -> bool:
@@ -158,7 +161,9 @@ class StencilServer:
     registration's ladder with LRU eviction of the least-recently-hit
     bucket design; ``async_dispatch`` + ``max_inflight`` control the
     double-buffered dispatch loop; ``strict`` refuses (rather than warns
-    about) designs degraded by a too-small device pool.
+    about) designs degraded by a too-small device pool and refuses
+    registrations carrying error-severity static-analysis findings
+    (:mod:`repro.core.analysis`).
     """
 
     def __init__(
@@ -222,6 +227,13 @@ class StencilServer:
         lazily on first request.  Re-registering a name with the same
         design and iterations is idempotent; re-registering it with a
         different one raises.
+
+        Registration runs the static verifier
+        (:func:`repro.core.analysis.verify`): findings are attached to
+        the returned registration's ``diagnostics``, and under
+        ``strict`` any error-severity finding refuses the registration
+        with a :class:`repro.core.analysis.VerificationError` before
+        anything compiles.
         """
         bucketer = self._bucketer_for(bucketing)
         if name in self._designs:
@@ -248,6 +260,15 @@ class StencilServer:
                 )
             return existing
 
+        from repro.core import analysis
+        from repro.runtime.cache import _as_spec
+
+        spec0 = _as_spec(source_or_spec)
+        fn = analysis.verify_or_raise if self.strict else analysis.verify
+        diags = tuple(fn(
+            spec0, iterations=iterations, bucketed=bucketer is not None,
+        ))
+
         if bucketer is not None:
             bucketed = self.cache.bucketed(
                 source_or_spec, bucketer=bucketer, platform=self.platform,
@@ -262,7 +283,7 @@ class StencilServer:
             )
             reg = _Registered(
                 name=name, cached=bucketed, counters=ctr,
-                iterations=iterations,
+                iterations=iterations, diagnostics=diags,
             )
             if self.warmup:
                 spec = bucketed.spec
@@ -286,7 +307,8 @@ class StencilServer:
             build_time_s=0.0 if cached.hit else cached.build_time_s,
         )
         reg = _Registered(
-            name=name, cached=cached, counters=ctr, iterations=iterations
+            name=name, cached=cached, counters=ctr, iterations=iterations,
+            diagnostics=diags,
         )
         # Warm even on a design-cache hit: the compiled program is shaped
         # (max_batch, ...) and THIS server's bucket size may be new.  When

@@ -1,0 +1,559 @@
+"""Static analyzer suite: footprint exactness, intervals, mutations.
+
+Four layers, mirroring the analyses in :mod:`repro.core.analysis`:
+
+  * **Footprint property test** — the inferred per-input tap bounding
+    box must equal the *empirically measured* blast radius against the
+    pure-numpy oracle from test_conformance.py: perturb one input cell
+    with NaN (NaN survives every oracle op, so the blast is exactly the
+    structural dependency set) and compare per-dim extremes.  Runs over
+    the same 200 seed-pinned random specs as the conformance floor,
+    plus a hypothesis layer over fresh seeds.
+  * **Interval-domain division safety** — the regression matrix for the
+    check_bucketable replacement: provably-safe kernels newly admitted
+    (and served bucketed, bit-compared to the oracle), straddling-zero
+    kernels still refused with the pinned message, fill-value widening
+    across chained stages.
+  * **Mutation corpus** — each seeded defect produces exactly the
+    expected SASA code at the expected source span.
+  * **Preflight parity** — candidate verdicts agree with
+    ``distribute.build_runner``'s actual accept/refuse behavior, and
+    ``autotune`` ranking is unchanged while infeasible candidates ride
+    along as diagnostics.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import test_conformance
+from repro.configs import stencils
+from repro.core import analysis, dsl
+from repro.core.analysis import (
+    DIAGNOSTIC_CODES,
+    Diagnostic,
+    VerificationError,
+    candidate_verdict,
+    preflight,
+)
+from repro.core.autotune import autotune
+from repro.core.distribute import build_runner
+from repro.core.ir import lower
+from repro.core.model import ParallelismConfig, choose_best
+from repro.core.platform import DEFAULT_TPU
+from repro.core.spec import Boundary, SourceSpan, ZERO_BOUNDARY
+from repro.runtime import ShapeBucketer, build_bucket_runner, padded_request_shape
+from repro.runtime.bucketing import check_bucketable, masked_spec, with_shape
+
+# ---------------------------------------------------------------------------
+# Footprint inference == empirical blast radius (NaN perturbation oracle)
+# ---------------------------------------------------------------------------
+
+
+def _measured_blast(spec, iterations, inp):
+    """Per-dim (min, max) offsets of cells affected by poking ``inp``.
+
+    The spec is re-declared on a grid large enough that the blast never
+    reaches the boundary, with zero boundary so nothing wraps; one NaN
+    is planted at the center of ``inp`` and the oracle's NaN output set
+    is the exact dependency footprint (NaN survives +,-,*,/ by nonzero
+    constants, abs, max, min and negation).
+    """
+    ext = 0
+    for box in analysis.spec_footprint(spec, iterations).values():
+        if box is not None:
+            for lo, hi in box:
+                ext = max(ext, -lo, hi)
+    shape = tuple(2 * ext + 5 for _ in range(spec.ndim))
+    big = dataclasses.replace(with_shape(spec, shape), boundary=ZERO_BOUNDARY)
+    rng = np.random.default_rng(0)
+    arrays = {
+        n: rng.standard_normal(shape).astype(np.float32) for n in big.inputs
+    }
+    center = tuple(s // 2 for s in shape)
+    arrays[inp] = arrays[inp].copy()
+    arrays[inp][center] = np.nan
+    out = test_conformance.numpy_oracle(big, arrays, iterations)
+    idx = np.argwhere(np.isnan(np.asarray(out)))
+    if idx.size == 0:
+        return None
+    return tuple(
+        (int(idx[:, d].min() - center[d]), int(idx[:, d].max() - center[d]))
+        for d in range(big.ndim)
+    )
+
+
+def _check_footprint_seed(seed: int) -> None:
+    spec, _arrays, iterations = test_conformance.random_spec(seed)
+    footprint = analysis.spec_footprint(spec, iterations)
+    assert set(footprint) == set(spec.inputs)
+    for inp, box in footprint.items():
+        blast = _measured_blast(spec, iterations, inp)
+        if box is None:
+            assert blast is None, (seed, inp, blast)
+        else:
+            # output[c] reads input[c + o] for o in box, so the blast of
+            # a poke at p spans [p - hi, p - lo] per dim — and the box
+            # extremes are per-dim achievable (Minkowski extremes add),
+            # so the match is exact, not just a bound.
+            want = tuple((-hi, -lo) for lo, hi in box)
+            assert blast == want, (seed, inp, blast, want)
+
+
+@pytest.mark.parametrize("block", range(test_conformance.N_BLOCKS))
+def test_footprint_matches_oracle_blast(block):
+    """200 seed-pinned specs: inferred box == measured blast radius."""
+    for seed in range(
+        block * test_conformance.BLOCK, (block + 1) * test_conformance.BLOCK
+    ):
+        _check_footprint_seed(seed)
+
+
+try:
+    import hypothesis
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.integers(min_value=1000, max_value=100_000))
+    @settings(
+        max_examples=25, deadline=None,
+        suppress_health_check=list(hypothesis.HealthCheck),
+    )
+    def test_footprint_hypothesis(seed):
+        _check_footprint_seed(seed)
+except ImportError:  # pragma: no cover - hypothesis is a tier-1 dep
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_footprint_hypothesis():
+        pass
+
+
+def test_footprint_blur_jacobi2d_pinned():
+    """Asymmetric two-stage kernel: exact composed box, per-dim slack."""
+    spec = stencils.get("blur_jacobi2d", shape=(32, 16), iterations=3)
+    assert analysis.spec_footprint(spec) == {"in": ((-6, 6), (-3, 9))}
+    assert analysis.per_dim_radii(spec) == (2, 3)
+    assert spec.radius == 3  # Chebyshev sum bounds the per-dim radii
+
+
+def test_footprint_survives_lowering():
+    """CSE/Let introduction must not change the inferred footprint."""
+    for name in ("blur_jacobi2d", "seidel2d", "heat3d", "dilate"):
+        spec = stencils.get(name, iterations=3)
+        assert analysis.spec_footprint(lower(spec).spec) == \
+            analysis.spec_footprint(spec), name
+
+
+def test_required_margins_and_proof():
+    spec = stencils.get("jacobi2d", shape=(16, 16), iterations=3)
+    spec = dataclasses.replace(spec, boundary=Boundary("periodic"))
+    assert analysis.required_margins(spec) == (3, 3)
+    assert analysis.margin_diagnostics(spec, (3, 3)) == []
+    diags = analysis.margin_diagnostics(spec, (2, 3))
+    assert [d.code for d in diags] == ["SASA307"]
+    assert diags[0].is_error and "dim 0" in diags[0].message
+    # non-periodic modes re-impose the exterior in-kernel: no margin
+    assert analysis.required_margins(
+        stencils.get("jacobi2d", iterations=3)
+    ) == (0, 0)
+
+
+# ---------------------------------------------------------------------------
+# Interval-domain division safety (the check_bucketable replacement)
+# ---------------------------------------------------------------------------
+
+DIV_BAD = """kernel: DIV-BAD
+iteration: 1
+input float: a(8, 8)
+input float: b(8, 8)
+output float: out(0, 0) = a(0, 0) / b(0, 1)
+"""
+
+DIV_SHIFTED = """kernel: DIV-SHIFTED
+iteration: 1
+input float: a(8, 8)
+input float: b(8, 8)
+output float: out(0, 0) = a(0, 0) / (b(0, 0) + 1.0)
+"""
+
+DIV_SAFE = """kernel: DIV-SAFE
+iteration: 1
+input float: a(8, 8)
+input float: b(8, 8)
+output float: out(0, 0) = a(0, 0) / (abs(b(0, 1)) + 2.0)
+"""
+
+DIV_CHAINED = """kernel: DIV-CHAINED
+iteration: 1
+input float: a(8, 8)
+local float: t(0, 0) = abs(a(0, 0)) + 1.0
+output float: out(0, 0) = a(0, 0) / t(0, 0)
+"""
+
+
+def test_division_still_refused():
+    """The historically-refused kernels stay refused, message pinned."""
+    for text in (DIV_BAD, DIV_SHIFTED):
+        spec = dsl.parse(text)
+        with pytest.raises(ValueError, match="divides by streamed data"):
+            analysis.require_bucketable(spec)
+        with pytest.raises(ValueError, match="cannot be shape-bucketed"):
+            masked_spec(spec)
+
+
+def test_division_provably_safe_admitted():
+    """``x / (abs(y) + 2)``: syntactically refused before, now proven safe
+    over intervals — and the bucketed runner matches the oracle."""
+    spec = dsl.parse(DIV_SAFE)
+    analysis.require_bucketable(spec)           # does not raise
+    assert analysis.division_diagnostics(spec) == []
+    masked_spec(spec)                           # bucket transforms accept it
+
+    rng = np.random.default_rng(7)
+    arrays = {
+        n: rng.standard_normal(spec.shape).astype(np.float32)
+        for n in spec.inputs
+    }
+    want = test_conformance.numpy_oracle(spec, arrays, 1)
+    bucket = ShapeBucketer().bucket_for(
+        padded_request_shape(spec, spec.shape, 1)
+    )
+    run = build_bucket_runner(
+        spec, bucket, ParallelismConfig("temporal", k=1, s=1), tile_rows=8
+    )
+    got = run({n: a[None] for n, a in arrays.items()})[0]
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_division_fill_widening_across_stages():
+    """A stage divisor proven nonzero on real data must also tolerate the
+    mask fill the bucket weave writes onto its padding."""
+    spec = dsl.parse(DIV_CHAINED)
+    # zero fill: t's padding holds 0.0 -> the division is unsafe bucketed
+    diags = analysis.division_diagnostics(spec, bucketed=True)
+    assert [d.code for d in diags] == ["SASA301"]
+    assert diags[0].is_error
+    # exact-shape there is no fill: ``abs(a) + 1`` is proven nonzero
+    assert analysis.division_diagnostics(spec, bucketed=False) == []
+    # while a genuinely unbounded divisor is the author's runtime hazard
+    # exact-shape: same code, demoted to a warning
+    warn = analysis.division_diagnostics(dsl.parse(DIV_BAD), bucketed=False)
+    assert [(d.code, d.severity) for d in warn] == [("SASA301", "warning")]
+    # constant fill 1.5 keeps t's interval away from zero: proven safe
+    const = dataclasses.replace(spec, boundary=Boundary("constant", 1.5))
+    assert analysis.division_diagnostics(const, bucketed=True) == []
+
+
+def test_check_bucketable_deprecated_shim():
+    with pytest.warns(DeprecationWarning, match="require_bucketable"):
+        check_bucketable(dsl.parse(DIV_SAFE))   # admitted, still warns
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="divides by streamed data"):
+            check_bucketable(dsl.parse(DIV_BAD))
+
+
+def test_interval_arithmetic():
+    I = analysis.Interval
+    assert analysis._idiv(I(1, 2), I(2, 4)) == I(0.25, 1.0)
+    assert analysis._idiv(I(1, 2), I(-1, 1)) == analysis.TOP
+    assert analysis._iabs(I(-3, 2)) == I(0, 3)
+    assert analysis._imul(I(0, 0), analysis.TOP) == I(0, 0)
+    assert not analysis._iadd(analysis._iabs(analysis.TOP), I(2, 2)) \
+        .contains_zero
+
+
+# ---------------------------------------------------------------------------
+# Mutation corpus: seeded defect -> expected code at the expected span
+# ---------------------------------------------------------------------------
+
+DEAD_STAGE = """kernel: DEAD-MUT
+iteration: 1
+input float: a(8, 8)
+local float: unused(0, 0) = a(1, 0) + a(-1, 0)
+output float: out(0, 0) = a(0, 0) * 2.0
+"""
+
+UNUSED_INPUT = """kernel: UNUSED-MUT
+iteration: 1
+iterate: a
+input float: a(8, 8)
+input float: b(8, 8)
+output float: out(0, 0) = a(0, 0) + 1.0
+"""
+
+DEAD_ITERATE = """kernel: ITER-MUT
+iteration: 3
+iterate: a
+input float: a(8, 8)
+input float: b(8, 8)
+output float: out(0, 0) = b(0, 0) * 2.0
+"""
+
+INVARIANT_SUBEXPR = """kernel: INV-MUT
+iteration: 3
+iterate: a
+input float: a(8, 8)
+input float: b(8, 8)
+output float: out(0, 0) = a(0, 0) + (b(0, 0) * 2.0 + b(1, 0))
+"""
+
+MUTATIONS = [
+    # (source, expected code, severity, (line, col))
+    (DIV_BAD, "SASA301", "error", (5, 27)),
+    (DEAD_STAGE, "SASA210", "warning", (4, 14)),
+    (UNUSED_INPUT, "SASA211", "warning", None),
+    (DEAD_ITERATE, "SASA402", "warning", (6, 15)),
+    (INVARIANT_SUBEXPR, "SASA403", "warning", (6, 38)),
+    ("kernel: X\nflibber\n", "SASA104", "error", (2, 1)),
+    ("kernel: X\niteration: nope\n", "SASA105", "error", (2, 12)),
+    (
+        "kernel: X\niteration: 1\ninput float: a(8, 8)\n"
+        "output float: out(0, 0) = a(0, 0) $ 2.0\n",
+        "SASA101", "error", (4, 35),
+    ),
+    (
+        "kernel: X\niteration: 1\ninput float: a(8, 8)\n"
+        "output float: out(0, 0) = a(0, 0)\n"
+        "output float: out(0, 0) = a(0, 0)\n",
+        "SASA107", "error", (5, 15),
+    ),
+    ("kernel: X\niteration: 1\ninput float: a(8, 8)\n",
+     "SASA106", "error", (1, 1)),
+]
+
+
+@pytest.mark.parametrize(
+    "text,code,severity,loc", MUTATIONS, ids=[m[1] for m in MUTATIONS]
+)
+def test_mutation_corpus(text, code, severity, loc):
+    _, diags = analysis.lint_text(text)
+    hits = [d for d in diags if d.code == code]
+    assert hits, (code, [d.code for d in diags])
+    d = hits[0]
+    assert d.severity == severity
+    if loc is None:
+        assert d.span is None
+    else:
+        assert (d.span.line, d.span.col) == loc, d.format(text)
+        # the caret rendering points into the real source line
+        assert text.splitlines()[d.span.line - 1] in d.format(text)
+
+
+def test_margin_mutation_is_error():
+    """Undersizing the bucket margin is the SASA307 error (the margin
+    the real bucket layer reserves always passes the proof)."""
+    spec = stencils.get("heat3d_periodic", iterations=2)
+    need = analysis.required_margins(spec, iterations=2)
+    assert analysis.margin_diagnostics(spec, need, iterations=2) == []
+    short = tuple(m - 1 for m in need)
+    diags = analysis.margin_diagnostics(spec, short, iterations=2)
+    assert diags and all(
+        d.code == "SASA307" and d.is_error for d in diags
+    )
+
+
+def test_diagnostic_registry_and_sorting():
+    for code, doc in DIAGNOSTIC_CODES.items():
+        assert code.startswith("SASA") and len(code) == 7 and doc
+    with pytest.raises(AssertionError):
+        Diagnostic("SASA999", "error", "unregistered code")
+    with pytest.raises(AssertionError):
+        Diagnostic("SASA301", "fatal", "unknown severity")
+    d1 = Diagnostic("SASA210", "warning", "w", span=SourceSpan(1, 1, 1))
+    d2 = Diagnostic("SASA301", "error", "e", span=SourceSpan(9, 1, 1))
+    assert analysis.sort_diagnostics([d1, d2]) == [d2, d1]
+
+
+def test_stock_kernels_verify_clean():
+    """Every stock kernel x all four boundary modes: zero diagnostics."""
+    shapes = {2: (64, 32), 3: (32, 16, 16)}
+    for name, fn in stencils.BENCHMARKS.items():
+        base = fn(iterations=4)
+        spec = fn(shape=shapes[base.ndim], iterations=4)
+        for boundary in test_conformance.BOUNDARIES:
+            sp = dataclasses.replace(spec, boundary=boundary)
+            assert analysis.verify(sp) == [], (name, boundary.kind)
+
+
+# ---------------------------------------------------------------------------
+# Feasibility preflight: parity with build_runner, autotune integration
+# ---------------------------------------------------------------------------
+
+
+def test_preflight_static_codes():
+    """Every build_runner refusal class is predicted, with its code."""
+    spec = stencils.get("jacobi2d", shape=(30, 8), iterations=3)
+
+    periodic = dataclasses.replace(spec, boundary=Boundary("periodic"))
+    v = candidate_verdict(periodic, ParallelismConfig("spatial_s", k=4), 8)
+    assert (v.feasible, v.code, v.k) == (False, "SASA302", 4)
+
+    replicate = dataclasses.replace(
+        with_shape(spec, (4, 8)), boundary=Boundary("replicate")
+    )
+    v = candidate_verdict(replicate, ParallelismConfig("spatial_s", k=8), 8)
+    assert (v.feasible, v.code) == (False, "SASA303")
+
+    tall = stencils.get("jacobi2d", shape=(16, 8), iterations=3)
+    v = candidate_verdict(tall, ParallelismConfig("spatial_r", k=8), 8)
+    assert (v.feasible, v.code) == (False, "SASA305")
+    # spatial_s streams fresh halos every round: same k is fine
+    assert candidate_verdict(
+        tall, ParallelismConfig("spatial_s", k=8), 8
+    ).feasible
+
+    wrapped = masked_spec(periodic, wrap_rounds=1)
+    assert wrapped.wrap_index_inputs
+    v = candidate_verdict(wrapped, ParallelismConfig("spatial_s", k=2), 8)
+    assert (v.feasible, v.code) == (False, "SASA304")
+    # temporal is single-device: immune to every shard guard but wrap
+    assert candidate_verdict(
+        periodic, ParallelismConfig("temporal", s=4), 8
+    ).feasible
+
+    # k is clamped to the pool exactly like build_runner's device slice
+    assert candidate_verdict(
+        periodic, ParallelismConfig("spatial_s", k=4), 1
+    ).feasible
+    # batched single-device candidates bypass build_runner entirely
+    assert candidate_verdict(
+        wrapped, ParallelismConfig("spatial_s", k=2), 1, batched=True
+    ).feasible
+    verdicts = preflight(
+        periodic,
+        [ParallelismConfig("spatial_s", k=4), ParallelismConfig("temporal")],
+        8,
+    )
+    assert [v.feasible for v in verdicts] == [False, True]
+    assert verdicts[0].diagnostic().code == "SASA302"
+    assert verdicts[1].diagnostic() is None
+
+
+def test_preflight_matches_build_runner():
+    """On the real device pool: predicted-infeasible candidates raise in
+    build_runner, predicted-feasible ones build."""
+    import jax
+
+    n = len(jax.devices())
+    cases = [
+        (stencils.get("jacobi2d", shape=(4, 8), iterations=8),
+         ParallelismConfig("spatial_r", k=1)),
+        (stencils.get("jacobi2d", shape=(16, 8), iterations=2),
+         ParallelismConfig("spatial_s", k=4)),
+        (stencils.get("jacobi2d", shape=(16, 8), iterations=2),
+         ParallelismConfig("temporal", s=2)),
+        (masked_spec(
+            dataclasses.replace(
+                stencils.get("jacobi2d", shape=(16, 8), iterations=2),
+                boundary=Boundary("periodic"),
+            ), wrap_rounds=1,
+        ), ParallelismConfig("spatial_s", k=2)),
+    ]
+    for spec, cfg in cases:
+        v = candidate_verdict(spec, cfg, n)
+        if v.feasible:
+            assert callable(build_runner(spec, cfg))
+        else:
+            with pytest.raises(ValueError):
+                build_runner(spec, cfg)
+
+
+def test_autotune_ranking_unchanged_with_diagnostics():
+    """The verdict table must not perturb the ranking; infeasible
+    candidates surface as info diagnostics instead of silent retries."""
+    spec = stencils.get("jacobi2d", shape=(32, 16), iterations=2)
+    td = autotune(spec, platform=DEFAULT_TPU, iterations=2, build=False)
+    want = choose_best(spec, DEFAULT_TPU, iterations=2)
+    assert [p.config for p in td.ranking] == [p.config for p in want]
+    assert isinstance(td.diagnostics, tuple)
+    assert all(d.severity == "info" for d in td.diagnostics)
+
+    # periodic rows not divisible by the forced spatial degree: every
+    # spatial candidate becomes infeasible on this pool and is reported
+    # as a verdict diagnostic, not rediscovered via ValueError
+    import jax
+
+    periodic = dataclasses.replace(
+        stencils.get("jacobi2d", shape=(30, 8), iterations=2),
+        boundary=Boundary("periodic"),
+    )
+    td = autotune(periodic, platform=DEFAULT_TPU, iterations=2, build=False,
+                  devices=list(jax.devices()) * 4)
+    assert any(d.code == "SASA302" for d in td.diagnostics)
+    assert all(d.severity == "info" for d in td.diagnostics)
+    ranked = [p.config for p in choose_best(periodic, DEFAULT_TPU,
+                                            iterations=2)]
+    assert [p.config for p in td.ranking] == ranked
+
+
+def test_autotune_and_parse_strict():
+    with pytest.raises(VerificationError):
+        autotune(DIV_BAD, platform=DEFAULT_TPU, build=False, strict=True)
+    td = autotune(DIV_BAD, platform=DEFAULT_TPU, build=False)  # non-strict
+    assert td.ranking
+    with pytest.raises(VerificationError) as ei:
+        dsl.parse(DIV_BAD, strict=True)
+    assert any(d.code == "SASA301" for d in ei.value.diagnostics)
+    assert dsl.parse(DIV_BAD).name == "DIV-BAD"  # default stays lenient
+
+
+def test_verify_platform_sasa306():
+    """A spec every candidate refuses is the SASA306 error."""
+    spec = masked_spec(
+        dataclasses.replace(
+            stencils.get("jacobi2d", shape=(16, 8), iterations=2),
+            boundary=Boundary("periodic"),
+        ), wrap_rounds=1,
+    )
+    diags = analysis.verify(spec, platform=DEFAULT_TPU, iterations=2,
+                            n_devices=8)
+    codes = {d.code for d in diags}
+    # every ranked candidate is multi-shard-hostile here (wrap margin)
+    if any(d.code == "SASA306" for d in diags):
+        assert any(d.code == "SASA304" for d in diags)
+    else:
+        # a single-device candidate in the ranking keeps it feasible
+        assert "SASA304" in codes or not codes
+
+
+def test_verification_error_formatting():
+    spec = dsl.parse(DIV_BAD)
+    with pytest.raises(VerificationError) as ei:
+        analysis.verify_or_raise(spec, source=DIV_BAD)
+    msg = str(ei.value)
+    assert "SASA301" in msg and "5:27" in msg
+    assert "out(0, 0) = a(0, 0) / b(0, 1)" in msg  # source line rendered
+    assert ei.value.diagnostics
+
+
+# ---------------------------------------------------------------------------
+# DSL spans: located syntax errors, equality modulo location
+# ---------------------------------------------------------------------------
+
+
+def test_dsl_syntax_error_attributes():
+    with pytest.raises(dsl.DSLSyntaxError) as ei:
+        dsl.parse("kernel: X\niteration: nope\n")
+    e = ei.value
+    assert (e.code, e.lineno, e.col) == ("SASA105", 2, 12)
+    assert e.span == SourceSpan(2, 12, 12)
+    assert "line 2" in str(e)
+    assert isinstance(e, SyntaxError)  # pre-analyzer callers keep working
+
+
+def test_spans_excluded_from_equality():
+    from repro.core.spec import Ref, Stage, StencilSpec
+
+    hand = StencilSpec(
+        name="SPAN-EQ", iterations=1,
+        inputs={"a": ("float32", (8, 8))},
+        stages=(Stage("out", "float32", Ref("a", (0, 1)), True),),
+        iterate_input="a",
+    )
+    text = dsl.format_spec(hand)
+    parsed = dsl.parse(text)
+    assert parsed == hand                       # round-trip identity
+    assert parsed.output_stage.expr.span is not None
+    assert hand.output_stage.expr.span is None  # hand-built: no spans
+    # shifting the source (different spans) still compares equal
+    assert dsl.parse("# shifted\n" + text) == parsed
