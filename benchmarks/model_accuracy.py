@@ -16,6 +16,12 @@ Two validations stand in here (no U280/TPU on this container):
    dataflow FPGA is cycle-exact; an out-of-order CPU under an optimizing
    compiler is not, so the bar here is usefulness for *ranking*, which is
    what the auto-tuner needs.
+
+Run directly (``PYTHONPATH=src:. python benchmarks/model_accuracy.py``)
+it asserts that gate — held-out pairwise rank accuracy >= 0.5;
+``--smoke`` (what ``scripts/ci.sh`` runs) shrinks kernels/points/grids
+to CI size.  Under the harness (``benchmarks/run.py``) it just emits
+CSV rows.
 """
 from __future__ import annotations
 
@@ -50,31 +56,46 @@ def _features(spec, iters, s):
     ])
 
 
-def _measure(name, iters, s):
-    shape = (256, 32, 32) if name in stencils.BENCHMARKS_3D else SHAPE
+def _measure(name, iters, s, smoke=False):
+    if name in stencils.BENCHMARKS_3D:
+        shape = (64, 16, 16) if smoke else (256, 32, 32)
+    else:
+        shape = (512, 128) if smoke else SHAPE
     spec = stencils.get(name, shape=shape, iterations=iters)
     arrays = {n: jnp.ones(shp, dt) for n, (dt, shp) in spec.inputs.items()}
     t = time_call(ops.stencil_run, spec, arrays, iters, s=s, backend="jnp")
     return spec, t
 
 
-def run():
+def run(check: bool = False, smoke: bool = False):
+    # smoke (CI): fewer kernels, fewer sweep points, ~16x smaller grids —
+    # same calibrate-on-some / validate-on-held-out protocol, gated only
+    # on ranking usefulness (what the auto-tuner actually consumes);
+    # absolute error percentages are noise-dominated at CI sizes.
+    calibrate = CALIBRATE_ON[:3] if smoke else CALIBRATE_ON
+    validate = VALIDATE_ON[:2] if smoke else VALIDATE_ON
+    points = [(1, 1), (4, 1), (16, 4)] if smoke else POINTS
     rows = []
     X, y = [], []
-    for name in CALIBRATE_ON:
-        for iters, s in POINTS:
-            spec, t = _measure(name, iters, s)
+    for name in calibrate:
+        for iters, s in points:
+            spec, t = _measure(name, iters, s, smoke)
             X.append(_features(spec, iters, s))
             y.append(t)
     X, y = np.array(X), np.array(y)
-    # non-negative least squares via multiplicative updates (no scipy)
-    Xs = X / X.max(0)
+    # non-negative least squares via multiplicative updates (no scipy);
+    # an op class absent from the whole calibration set (e.g. no compare
+    # ops among the smoke kernels) leaves an all-zero column — scale it
+    # by 1 instead of 0/0-poisoning the fit
+    colmax = X.max(0)
+    colmax[colmax == 0] = 1.0
+    Xs = X / colmax
     coef = np.full(X.shape[1], 1e-3)
     for _ in range(5000):
         num = Xs.T @ y
         den = Xs.T @ (Xs @ coef) + 1e-18
         coef *= num / den
-    coef = coef / X.max(0)
+    coef = coef / colmax
     insample = X @ coef
     in_err = np.abs(insample - y) / y * 100
     rows.append(
@@ -82,15 +103,15 @@ def run():
         f"op_costs_ns={';'.join(f'{c*1e9:.3f}' for c in coef[:4])};"
         f"eff_bw={1/max(coef[4],1e-18):.2e};"
         f"in_sample_mean_err_pct={in_err.mean():.1f};"
-        f"fit_kernels={'+'.join(CALIBRATE_ON)}")
+        f"fit_kernels={'+'.join(calibrate)}")
 
     errs = []
     rank_hits = 0
     rank_total = 0
-    for name in VALIDATE_ON:
+    for name in validate:
         meas_by_pt = {}
-        for iters, s in POINTS:
-            spec, t = _measure(name, iters, s)
+        for iters, s in points:
+            spec, t = _measure(name, iters, s, smoke)
             pred = float(_features(spec, iters, s) @ coef)
             err = abs(pred - t) / t * 100
             errs.append(err)
@@ -119,12 +140,12 @@ def run():
     # the <5% claim).  One measurement at (iters=1, s=1) anchors each
     # kernel; all other (iters, s) points are blind predictions. ---
     errs2 = []
-    for name in CALIBRATE_ON + VALIDATE_ON:
-        spec1, t1 = _measure(name, 1, 1)
+    for name in calibrate + validate:
+        spec1, t1 = _measure(name, 1, 1, smoke)
         f1 = _features(spec1, 1, 1) @ coef
         scale = t1 / max(f1, 1e-12)
-        for iters, s in POINTS[1:]:
-            spec, t = _measure(name, iters, s)
+        for iters, s in points[1:]:
+            spec, t = _measure(name, iters, s, smoke)
             pred = float(_features(spec, iters, s) @ coef) * scale
             err = abs(pred - t) / t * 100
             errs2.append(err)
@@ -137,4 +158,29 @@ def run():
         f"median_error_pct={np.median(errs2):.1f};"
         f"max_error_pct={np.max(errs2):.1f};"
         f"methodology=calibrate-once-per-design predict-across-iterations")
+
+    if check:
+        # the model exists to *rank* candidate designs, so the CI gate is
+        # ordering, not absolute error (an OoO CPU under XLA is not the
+        # paper's cycle-exact dataflow FPGA): on held-out kernels the
+        # predicted ordering of (iterations, fusion) points must beat a
+        # coin flip, and the fit itself must be finite and usable.
+        assert rank_total > 0, "no held-out pairwise ranking comparisons"
+        rank_acc = rank_hits / rank_total
+        assert rank_acc >= 0.5, (
+            f"held-out pairwise rank accuracy {rank_hits}/{rank_total} "
+            f"= {rank_acc:.2f} < 0.5 — the model orders designs worse "
+            "than chance"
+        )
+        assert np.isfinite(errs).all() and np.isfinite(errs2).all()
     return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    for row in run(check=True, smoke="--smoke" in sys.argv[1:]):
+        print(row)
+    print("OK: analytical host model calibrated on some kernels ranks "
+          "held-out kernels' (iterations, fusion) points better than "
+          "chance")

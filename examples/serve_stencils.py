@@ -23,8 +23,19 @@ real grid is host-streamed into the bucket's halo margin) share the same
 bucketed micro-batch loop as the zero-boundary traffic — one logical
 registration per kernel, any feasible geometry.
 
+Part 4 is the warm restart: a server pointed at a persistent store
+directory (`store_dir=`) writes its tuned rankings and AOT-serialized
+executables through to disk, and a "restarted" server (fresh cache, same
+directory) reaches its first bitwise-identical result without ranking a
+single candidate or compiling a single program.  The subprocess version
+of this claim — with its >= 10x cold-start gate — is
+`benchmarks/cold_start.py`.
+
     PYTHONPATH=src python examples/serve_stencils.py
 """
+import tempfile
+import time
+
 import numpy as np
 
 from repro.runtime import DesignCache
@@ -165,11 +176,48 @@ def boundary_demo(rng):
           "mixed-boundary traffic shares the async micro-batch loop")
 
 
+def warm_restart_demo(rng):
+    print("\n== persistent store (warm restart from disk) ==")
+    grid = {"in_1": rng.standard_normal((512, 256)).astype(np.float32)}
+
+    def replica(store_dir):
+        # a fresh StencilServer + DesignCache each time — only the store
+        # directory survives, exactly like a server process restarting
+        t0 = time.perf_counter()
+        srv = StencilServer(max_batch=4, store_dir=store_dir)
+        srv.register("jacobi", JACOBI)
+        out = srv.serve([StencilRequest("jacobi", dict(grid))])[0]
+        dt = time.perf_counter() - t0
+        srv.persist_telemetry()
+        return srv, out, dt
+
+    with tempfile.TemporaryDirectory() as td:
+        srv1, out1, cold_s = replica(td)
+        st1 = srv1.stats()["_cache"]
+        print(f"cold replica: first result in {cold_s * 1e3:.0f} ms "
+              f"(autotune_calls={st1['autotune_calls']}, "
+              f"jit_builds={st1['jit_builds']})")
+
+        srv2, out2, warm_s = replica(td)
+        st2 = srv2.stats()["_cache"]
+        print(f"warm restart: first result in {warm_s * 1e3:.0f} ms "
+              f"(autotune_calls={st2['autotune_calls']}, "
+              f"jit_builds={st2['jit_builds']}, "
+              f"store_hits={st2['store_hits']}) — "
+              f"{cold_s / warm_s:.1f}x faster")
+        assert np.array_equal(out1, out2), "warm restart must be bitwise"
+        print(f"store: {srv2.stats()['_store']}")
+        print("outputs bitwise-identical: the warm replica replays the "
+              "very executable the cold one compiled; inspect the store "
+              "with `python -m repro.store list <dir>`")
+
+
 def main():
     rng = np.random.default_rng(0)
     exact_shape_demo(rng)
     bucketed_demo(rng)
     boundary_demo(rng)
+    warm_restart_demo(rng)
 
 
 if __name__ == "__main__":

@@ -14,7 +14,14 @@ module may
     ``pl.Unblocked``, or an ``indexing_mode=`` keyword) instead of
     ``repro.compat.element_block_spec``;
   * pass ``check_rep=``/``check_vma=`` to anything that was not
-    imported from ``repro.compat`` (the shim normalises the kwarg name).
+    imported from ``repro.compat`` (the shim normalises the kwarg name);
+  * touch the AOT export/serialize surface the persistent design store
+    is built on — ``jax.experimental.serialize_executable`` and
+    ``jax.export`` / ``jax.experimental.export`` — instead of
+    ``repro.compat.aot_compile`` / ``aot_serialize`` /
+    ``aot_deserialize`` (these APIs moved between jax releases and the
+    store must keep loading with a recompile fallback when they are
+    absent).
 
 Exit 1 with file:line findings on violation, 0 when clean.
 """
@@ -67,12 +74,35 @@ def check_file(path: pathlib.Path) -> list[str]:
                             f"direct {a.name} import from {mod!r}; use "
                             "repro.compat.pvary"
                         ))
+                    if (
+                        a.name == "serialize_executable"
+                        or "serialize_executable" in mod
+                    ):
+                        flag(node, (
+                            f"direct serialize_executable import from "
+                            f"{mod!r}; use repro.compat.aot_serialize/"
+                            "aot_deserialize"
+                        ))
+                    if a.name == "export" and mod in (
+                        "jax", "jax.experimental",
+                    ) or mod in ("jax.export", "jax.experimental.export"):
+                        flag(node, (
+                            f"direct jax export import from {mod!r}; use "
+                            "repro.compat.aot_serialize/aot_deserialize"
+                        ))
         elif isinstance(node, ast.Import):
             for a in node.names:
                 if "shard_map" in a.name:
                     flag(node, (
                         f"direct import of {a.name!r}; use "
                         "repro.compat.shard_map"
+                    ))
+                if "serialize_executable" in a.name or a.name in (
+                    "jax.export", "jax.experimental.export",
+                ):
+                    flag(node, (
+                        f"direct import of {a.name!r}; use "
+                        "repro.compat.aot_serialize/aot_deserialize"
                     ))
         elif isinstance(node, ast.Attribute):
             dotted = _dotted(node)
@@ -81,6 +111,13 @@ def check_file(path: pathlib.Path) -> list[str]:
             ):
                 flag(node, (
                     f"direct use of {dotted}; use repro.compat.shard_map"
+                ))
+            elif dotted.endswith("experimental.serialize_executable") or (
+                dotted in ("jax.export", "jax.experimental.export")
+            ):
+                flag(node, (
+                    f"direct use of {dotted}; use repro.compat."
+                    "aot_serialize/aot_deserialize"
                 ))
             elif node.attr in ("pcast", "pvary") and dotted.startswith(
                 ("lax.", "jax.lax.")

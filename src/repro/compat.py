@@ -24,10 +24,30 @@ Shimmed surface:
   ``element_block_spec`` ``pl.BlockSpec`` with       ``pl.BlockSpec(...,
                          ``pl.Element`` dims         indexing_mode=
                                                      pl.Unblocked())``
+  AOT persistence        ``jax.experimental.         same, or ``jax.export``
+                         serialize_executable``      StableHLO when executable
+                                                     (de)serialization is
+                                                     missing, or ``None``
   =====================  ==========================  =======================
+
+The AOT tier feeds the persistent design store
+(:mod:`repro.runtime.store`): compiled executables are serialized with
+the best mechanism the installed jax offers, in order of preference
+
+  1. ``jax.experimental.serialize_executable`` — the whole XLA
+     executable; deserialization skips tracing *and* compilation
+     (milliseconds to first result);
+  2. ``jax.export`` — portable StableHLO; deserialization skips Python
+     tracing but still pays XLA compilation on first call;
+  3. neither — the store persists rankings only and warm starts
+     recompile from the persisted ranking (still skipping autotune).
+
+No module outside this file may import either API directly
+(``scripts/check_compat_imports.py`` enforces it).
 """
 from __future__ import annotations
 
+import pickle
 import re
 from typing import Callable, Sequence
 
@@ -123,6 +143,104 @@ else:
         """No-op on jax 0.4.x: shard_map's replication checker computes a
         fixpoint over loop carries there, so pre-casting is unnecessary."""
         return x
+
+
+# --------------------------------------------------------------------------
+# AOT compile / serialize / deserialize (persistent design store)
+# --------------------------------------------------------------------------
+
+
+def _detect_serialize_executable():
+    try:
+        from jax.experimental import serialize_executable as se
+    except ImportError:
+        return None
+    if hasattr(se, "serialize") and hasattr(se, "deserialize_and_load"):
+        return se
+    return None
+
+
+def _detect_export():
+    try:
+        from jax import export as ex  # jax >= 0.4.30 spelling
+    except ImportError:
+        try:
+            from jax.experimental import export as ex  # older spelling
+        except ImportError:
+            return None
+    if hasattr(ex, "deserialize"):
+        return ex
+    return None
+
+
+_SERIALIZE_EXECUTABLE = _detect_serialize_executable()
+_EXPORT = _detect_export()
+
+#: The executable-serialization tier the installed jax supports:
+#: "executable" (whole XLA executable, ms warm start), "stablehlo"
+#: (portable export, warm start still compiles), or None (rankings-only
+#: persistence; warm starts recompile but skip autotune).
+AOT_KIND: str | None = (
+    "executable" if _SERIALIZE_EXECUTABLE is not None
+    else "stablehlo" if _EXPORT is not None
+    else None
+)
+
+
+def aot_compile(jitted, sample_args):
+    """Explicit AOT compile of a jitted callable for concrete/abstract args.
+
+    ``jit(f).lower(args).compile()`` is version-stable API; funnelled here
+    anyway so the design store's whole AOT surface lives behind compat.
+    The returned executable is also what :func:`aot_serialize` persists.
+    """
+    return jitted.lower(sample_args).compile()
+
+
+def aot_serialize(compiled=None, jitted=None, sample_args=None):
+    """Serialize a compiled design to bytes; returns ``(kind, blob)``.
+
+    Pass the ``compiled`` executable from :func:`aot_compile` (preferred;
+    used verbatim by the "executable" tier) and/or the ``jitted``
+    callable + ``sample_args`` (the "stablehlo" tier re-exports from
+    them).  Returns ``(None, None)`` when the installed jax supports
+    neither — callers must then persist rankings only.
+    """
+    if _SERIALIZE_EXECUTABLE is not None and compiled is not None:
+        payload, in_tree, out_tree = _SERIALIZE_EXECUTABLE.serialize(compiled)
+        return "executable", pickle.dumps((payload, in_tree, out_tree))
+    if _EXPORT is not None and jitted is not None and sample_args is not None:
+        exported = _EXPORT.export(jitted)(sample_args)
+        return "stablehlo", exported.serialize()
+    return None, None
+
+
+def aot_deserialize(kind: str, blob: bytes):
+    """Rehydrate a persisted design into a callable executable.
+
+    ``kind`` must match what :func:`aot_serialize` returned when the blob
+    was written.  Raises ``ValueError`` when the installed jax cannot
+    load that kind (e.g. the store was written by a jax with executable
+    serialization and this one lacks it) — callers treat that as a store
+    miss and recompile from the persisted ranking.
+    """
+    if kind == "executable":
+        if _SERIALIZE_EXECUTABLE is None:
+            raise ValueError(
+                "this jax cannot deserialize persisted XLA executables"
+            )
+        payload, in_tree, out_tree = pickle.loads(blob)
+        return _SERIALIZE_EXECUTABLE.deserialize_and_load(
+            payload, in_tree, out_tree
+        )
+    if kind == "stablehlo":
+        if _EXPORT is None:
+            raise ValueError(
+                "this jax cannot deserialize persisted StableHLO exports"
+            )
+        exported = _EXPORT.deserialize(blob)
+        return jax.jit(exported.call)
+    raise ValueError(f"unknown persisted-executable kind {kind!r}")
 
 
 # --------------------------------------------------------------------------

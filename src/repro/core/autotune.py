@@ -64,6 +64,7 @@ def autotune(
     cache=None,
     bucket=False,
     strict: bool = False,
+    store=None,
 ) -> TunedDesign:
     """The SASA entry point: DSL text (or parsed spec) -> optimized runner.
 
@@ -77,6 +78,14 @@ def autotune(
     the ranking and the jitted runner across calls (serving entry points
     do this by default; repeated tuning of the same spec then costs a
     dictionary lookup instead of a re-rank + re-jit).
+
+    Pass a :class:`repro.runtime.DesignStore` (or a path) as ``store`` to
+    make that memoization **persistent**: a warm store already holding
+    this spec's ranking skips the design-space enumeration entirely, and
+    fresh tuning results are written through for the next process.
+    Without an explicit ``cache`` a store-backed cache is created; with
+    one, the store is attached to it (a cache already bound to a
+    *different* store is refused).
 
     With ``bucket`` (requires ``cache``; ``True`` for the default
     power-of-two ladder or a :class:`repro.runtime.ShapeBucketer`), the
@@ -95,6 +104,20 @@ def autotune(
         analysis.verify_or_raise(
             spec_in, platform=platform, iterations=iterations,
         )
+    if store is not None:
+        from repro.runtime.cache import DesignCache
+        from repro.runtime.store import as_store
+
+        store = as_store(store)
+        if cache is None:
+            cache = DesignCache(store=store)
+        elif cache.store is None:
+            cache.store = store
+        elif cache.store is not store:
+            raise ValueError(
+                "autotune(store=...) conflicts with the cache's own store; "
+                "pass one or the other"
+            )
     if bucket:
         if cache is None:
             raise ValueError("autotune(bucket=...) requires cache=")

@@ -48,6 +48,11 @@ from repro.runtime.cache import (
     spec_fingerprint,
     structural_fingerprint,
 )
+from repro.runtime.store import (
+    DesignStore,
+    StoreStats,
+    environment_tag,
+)
 
 __all__ = [
     "DegradedDesignWarning",
@@ -78,7 +83,10 @@ __all__ = [
     "BucketStats",
     "CachedDesign",
     "DesignCache",
+    "DesignStore",
+    "StoreStats",
     "default_cache",
+    "environment_tag",
     "spec_fingerprint",
     "structural_fingerprint",
 ]

@@ -222,7 +222,7 @@ def build_batched_runner(
         def finalize(out: jnp.ndarray) -> np.ndarray:
             return np.asarray(out)
 
-        mesh, n_used = None, 1
+        mesh, n_used, jitted = None, 1, fn
     else:
         bk = "shard_map"
         inner = build_runner(
@@ -231,6 +231,7 @@ def build_batched_runner(
         )
         stage, dispatch, finalize = inner.stage, inner.dispatch, inner.finalize
         path, mesh, n_used = "shard_map", inner.mesh, n_dev
+        jitted = None   # shard_map programs are not AOT-persistable (yet)
 
     def run(arrays: Mapping[str, jnp.ndarray]) -> np.ndarray:
         validate_batch(spec, arrays)
@@ -248,6 +249,10 @@ def build_batched_runner(
     run.stage = stage
     run.dispatch = dispatch
     run.finalize = finalize
+    # the underlying jit-wrapped batched program (single-device paths):
+    # what the persistent design store AOT-lowers, compiles, and
+    # serializes per input signature (None = not AOT-persistable)
+    run.jitted = jitted
     return run
 
 
@@ -335,4 +340,5 @@ def build_bucket_runner(
     run.stage = inner.stage
     run.dispatch = inner.dispatch
     run.finalize = inner.finalize
+    run.jitted = getattr(inner, "jitted", None)
     return run

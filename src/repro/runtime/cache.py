@@ -23,6 +23,15 @@ pool (or vice versa) as if it owned its configured parallelism.
 
 Hits and misses are counted per key so serving surfaces can report cache
 behaviour (see ``StencilServer.stats``).
+
+With a :class:`repro.runtime.store.DesignStore` attached
+(``DesignCache(store=...)``), both levels read through disk on a miss
+and write through on a build: rankings are persisted whole, and
+single-device batched runners persist their compiled executables per
+input signature via :mod:`repro.compat`'s AOT tier — so a fresh process
+pointed at a warm store serves its first result without autotuning,
+tracing, or compiling anything (docs/DESIGN.md §Persistent design
+store).
 """
 from __future__ import annotations
 
@@ -34,6 +43,7 @@ from typing import Mapping, Sequence
 
 import jax
 
+from repro import compat
 from repro.core import analysis, dsl
 from repro.core.analysis import Diagnostic, require_bucketable
 from repro.core.autotune import TunedDesign, autotune
@@ -46,11 +56,20 @@ from repro.runtime.batching import (
     build_bucket_runner,
     degraded_message,
     is_degraded,
+    resolve_backend,
+    validate_batch,
 )
 from repro.runtime.bucketing import (
     ShapeBucketer,
     bucket_spec,
     padded_request_shape,
+)
+from repro.runtime.store import (
+    DesignStore,
+    as_store,
+    batch_signature,
+    design_key,
+    runner_key,
 )
 
 
@@ -106,6 +125,7 @@ class KeyStats:
     hits: int = 0
     misses: int = 0
     build_time_s: float = 0.0
+    store_hits: int = 0     # misses served warm from the persistent store
 
 
 @dataclasses.dataclass
@@ -137,21 +157,67 @@ class DesignCache:
     item: bucket-ladder eviction (``max_buckets``) only drops a
     registration's reference, while this bounds the shared memoization
     itself.
+
+    ``store`` (a :class:`repro.runtime.store.DesignStore` or a path)
+    makes the cache **persistent**: rankings are read through from /
+    written through to disk (a warm process never re-autotunes), and
+    single-device batched runners persist their compiled executables per
+    input signature through :mod:`repro.compat`'s AOT tier, so a warm
+    replica's first dispatch deserializes instead of tracing+compiling.
+    ``autotune_calls`` counts actual design-space enumerations and
+    ``jit_builds`` counts actual AOT trace+compile events — both stay 0
+    on a fully warm path (the cold-start gate asserts this).  An
+    LRU-evicted runner (``max_designs``) rebuilds from the store:
+    re-jitting only happens when the executable entry is gone too.
     """
 
-    def __init__(self, max_designs: int | None = None):
+    def __init__(
+        self,
+        max_designs: int | None = None,
+        store: "DesignStore | str | None" = None,
+    ):
         if max_designs is not None and max_designs < 1:
             raise ValueError(
                 f"max_designs must be >= 1, got {max_designs}"
             )
         self.max_designs = max_designs
+        self.store = as_store(store)
         self.runner_evictions = 0
+        self.autotune_calls = 0    # design-space enumerations actually run
+        self.jit_builds = 0        # AOT trace+compile events actually run
         self._designs: dict[tuple, TunedDesign] = {}
         self._runners: "collections.OrderedDict[tuple, tuple[object, float]]" = (
             collections.OrderedDict()
         )
         self._failed: dict[tuple, str] = {}    # infeasible-config memo
         self._stats: dict[tuple, KeyStats] = {}
+        if self.store is not None:
+            self._restore_telemetry()
+
+    def _restore_telemetry(self) -> None:
+        """Seed per-key counters from the store so a restart resumes the
+        telemetry the measurement-calibrated cost model consumes."""
+        tel = self.store.get_telemetry()
+        if tel is None:
+            return
+        fields = {f.name for f in dataclasses.fields(KeyStats)}
+        for key, d in tel.get("keys", {}).items():
+            try:
+                self._stats[key] = KeyStats(
+                    **{k: v for k, v in d.items() if k in fields}
+                )
+            except (TypeError, ValueError):
+                continue   # stale telemetry shape: skip, don't crash
+
+    def flush_telemetry(self, buckets: dict | None = None) -> None:
+        """Write-through the per-key counters (and optionally per-bucket
+        counters) to the attached store; no-op without one."""
+        if self.store is None:
+            return
+        self.store.put_telemetry(
+            {k: dataclasses.asdict(s) for k, s in self._stats.items()},
+            buckets or {},
+        )
 
     # ------------------------------------------------------------------
     # design level (ranking only, no executor build)
@@ -165,18 +231,39 @@ class DesignCache:
         devices=None,
         clip_to_devices: bool = False,
     ) -> TunedDesign:
-        """Cached ``autotune(..., build=False)``: ranked configs for a spec."""
+        """Cached ``autotune(..., build=False)``: ranked configs for a spec.
+
+        With a store attached the miss path reads through disk before
+        autotuning: a persisted ranking (written by any process sharing
+        the store) is rehydrated without enumerating the design space,
+        and a fresh autotune result is written through for the next
+        replica.
+        """
         spec = _as_spec(source_or_spec)
         plat = _resolve_platform(platform, devices, clip_to_devices)
+        structural = structural_fingerprint(spec)
         key = (
-            "design", structural_fingerprint(spec), tuple(spec.shape),
+            "design", structural, tuple(spec.shape),
             plat, iterations,
         )
         st = self._stats.setdefault(key, KeyStats())
         if key in self._designs:
             st.hits += 1
             return self._designs[key]
+        skey = None
+        if self.store is not None:
+            skey = design_key(structural, spec.shape, plat, iterations)
+            got = self.store.get_design(skey)
+            if got is not None:
+                stored_spec, ranking = got
+                tuned = TunedDesign(
+                    stored_spec, ranking[0], list(ranking), None,
+                )
+                st.store_hits += 1
+                self._designs[key] = tuned
+                return tuned
         st.misses += 1
+        self.autotune_calls += 1
         t0 = time.perf_counter()
         tuned = autotune(
             spec, platform=plat, iterations=iterations, devices=devices,
@@ -184,6 +271,11 @@ class DesignCache:
         )
         st.build_time_s += time.perf_counter() - t0
         self._designs[key] = tuned
+        if skey is not None:
+            # persist the lowered spec + full ranking: warm starts skip
+            # both the IR lowering and the design-space enumeration
+            self.store.put_design(skey, tuned.spec, tuned.ranking)
+            self.flush_telemetry()
         return tuned
 
     # ------------------------------------------------------------------
@@ -253,6 +345,13 @@ class DesignCache:
         except ValueError as e:
             self._failed[key] = str(e)
             raise
+        if self.store is not None and getattr(run, "jitted", None) is not None:
+            skey = runner_key(
+                structural_fingerprint(spec), spec.shape, cfg, n_used,
+                iterations, tile_rows, resolve_backend(backend),
+                align_cols, batched,
+            )
+            run = self._attach_store(run, skey)
         dt = time.perf_counter() - t0
         st.build_time_s += dt
         self._runners[key] = (run, dt)
@@ -261,6 +360,55 @@ class DesignCache:
                 self._runners.popitem(last=False)   # least recently hit
                 self.runner_evictions += 1
         return run
+
+    def _attach_store(self, run, store_key: str):
+        """Persistence layer over a batched runner's dispatch phase.
+
+        jit compiles lazily per batch signature, so executables are
+        intercepted where they materialize: on each new input signature
+        the dispatch path tries the store first (deserializing a
+        persisted executable in milliseconds), and only on a store miss
+        AOT-compiles explicitly — counting ``jit_builds`` — and writes
+        the serialized executable through for the next replica.  All
+        phases and reporting attributes of the wrapped runner are
+        preserved; results are bitwise-identical either way (the
+        executable IS the program that would have been compiled).
+        """
+        store, spec, jitted = self.store, run.spec, run.jitted
+        inner_stage, inner_finalize = run.stage, run.finalize
+        executables: dict[str, object] = {}
+
+        def dispatch(staged):
+            staged = dict(staged)
+            sig = batch_signature(staged)
+            comp = executables.get(sig)
+            if comp is None:
+                comp = store.get_executable(store_key, sig)
+                if comp is None:
+                    comp = compat.aot_compile(jitted, staged)
+                    self.jit_builds += 1
+                    kind, blob = compat.aot_serialize(
+                        compiled=comp, jitted=jitted, sample_args=staged,
+                    )
+                    if kind is not None:
+                        store.put_executable(store_key, sig, kind, blob)
+                executables[sig] = comp
+            return comp(staged)
+
+        def persistent_run(arrays):
+            validate_batch(spec, arrays)
+            return inner_finalize(dispatch(inner_stage(arrays)))
+
+        for attr in (
+            "spec", "cfg", "iterations", "path", "backend", "mesh",
+            "n_devices", "devices_requested", "degraded", "jitted",
+        ):
+            setattr(persistent_run, attr, getattr(run, attr))
+        persistent_run.stage = inner_stage
+        persistent_run.dispatch = dispatch
+        persistent_run.finalize = inner_finalize
+        persistent_run.store_key = store_key
+        return persistent_run
 
     # ------------------------------------------------------------------
     # combined entry point (what serving calls)
@@ -421,11 +569,19 @@ class DesignCache:
         return len(self._designs) + len(self._runners)
 
     def clear(self) -> None:
+        """Drop the in-memory memoization (the persistent store, if any,
+        is untouched: a cleared cache re-warms from disk)."""
         self._designs.clear()
         self._runners.clear()
         self._failed.clear()
         self._stats.clear()
         self.runner_evictions = 0
+        self.autotune_calls = 0
+        self.jit_builds = 0
+
+    @property
+    def store_hits(self) -> int:
+        return sum(s.store_hits for s in self._stats.values())
 
 
 # --------------------------------------------------------------------------
@@ -513,6 +669,26 @@ class BucketedDesign:
         self._evicted_stats: dict[tuple[int, ...], BucketStats] = {}
         self.evictions: int = 0
         self._wrap_rounds = ...   # undecided until first routing
+        if cache.store is not None:
+            # restart continuity: persisted per-bucket counters land in
+            # the archived-stats map, so the first (re)build of each
+            # bucket resumes them through the existing eviction-resume
+            # path instead of zeroing the ladder's history
+            tel = cache.store.get_telemetry()
+            fields = {f.name for f in dataclasses.fields(BucketStats)}
+            for bkey, d in (tel or {}).get("buckets", {}).items():
+                try:
+                    structural, bucket = bkey
+                except (TypeError, ValueError):
+                    continue
+                if structural != self.structural:
+                    continue
+                try:
+                    self._evicted_stats[tuple(bucket)] = BucketStats(
+                        **{k: v for k, v in d.items() if k in fields}
+                    )
+                except (TypeError, ValueError):
+                    continue
 
     @property
     def wrap_rounds(self) -> int | None:
@@ -616,7 +792,24 @@ class BucketedDesign:
                 old_bucket, old = self._entries.popitem(last=False)
                 self._evicted_stats[old_bucket] = old.stats
                 self.evictions += 1
+        self.persist_stats()
         return entry
+
+    def persist_stats(self) -> None:
+        """Write-through this registration's per-bucket counters to the
+        cache's persistent store (no-op without one); restarts restore
+        them through the archived-stats map."""
+        if self.cache.store is None:
+            return
+        buckets = {
+            (self.structural, b): e.stats.as_dict()
+            for b, e in self._entries.items()
+        }
+        buckets.update({
+            (self.structural, b): s.as_dict()
+            for b, s in self._evicted_stats.items()
+        })
+        self.cache.flush_telemetry(buckets)
 
     def run(self, shape, arrays) -> "np.ndarray":
         """Convenience: serve one uniform-shape batch through its bucket."""

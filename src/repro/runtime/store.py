@@ -1,0 +1,444 @@
+"""Persistent AOT design store: the on-disk half of the FPGA-bitstream
+analogy.
+
+SASA's tuned design is synthesized **once** into a bitstream and reused
+for the deployment's lifetime; :class:`repro.runtime.DesignCache` is the
+in-process analogue, but it dies with the process — every server restart
+re-autotunes and re-jits the whole bucket ladder.  ``DesignStore``
+completes the analogy by persisting both cache levels to a directory
+that N replica processes can share:
+
+  * **design entries** — the autotune ranking (the lowered spec + the
+    full :class:`repro.core.model.Prediction` list), so a warm start
+    never re-enumerates the design space;
+  * **executable entries** — compiled executables serialized through
+    :mod:`repro.compat`'s AOT tier (whole XLA executables when the
+    installed jax supports it, portable StableHLO otherwise, rankings
+    only when neither is available), one file per compiled input
+    signature, so a warm replica reaches its first bitwise-identical
+    result without tracing or compiling anything;
+  * **telemetry** — the cache's per-key :class:`KeyStats` and each
+    registration's per-bucket :class:`BucketStats` counters, restored on
+    warm start so restarts don't zero the inputs the
+    measurement-calibrated cost model consumes.
+
+Layout and invalidation::
+
+    <root>/
+      manifest.json                  # schema + the envs ever written
+      <env>/                         # schema<N>-jax<version>-<backend>
+        designs/<digest>.pkl         # ranking entries
+        executables/<digest>.<sig>.pkl
+        telemetry.pkl
+        quarantine/                  # corrupt/undecodable entries land here
+
+The **environment tag** bakes the store schema version, the jax version,
+and the default backend into the directory name: a jax upgrade (or a
+schema bump) makes every stale entry invisible — clean invalidation with
+no in-place migration — and ``python -m repro.store prune`` deletes the
+dead environments.  Entry keys additionally carry the structural
+fingerprint, grid/bucket shape, :class:`ParallelismConfig`, platform,
+and the device count the runner occupies, so a design built for one pool
+is never served to a different one as if it owned its parallelism.
+
+Every write is atomic (tmp file + ``os.replace`` in the same directory),
+so concurrent replicas sharing one store directory never observe a torn
+entry; concurrent writers of the *same* entry are idempotent
+(last-writer-wins on identical content).  Every entry is framed with a
+magic header + SHA-256 checksum: a corrupt, truncated, or undecodable
+file is **quarantined** (moved aside, counted, server keeps running)
+rather than crashing the replica.  Telemetry is a best-effort
+observability snapshot (last-writer-wins per environment), not an exact
+ledger.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pickle
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+
+from repro import compat
+
+SCHEMA_VERSION = 1
+
+_MAGIC = b"SASA-STORE\x01"
+
+
+def environment_tag(backend: str | None = None) -> str:
+    """The invalidation unit: schema x jax version x backend."""
+    return (
+        f"schema{SCHEMA_VERSION}-jax{jax.__version__}-"
+        f"{backend or jax.default_backend()}"
+    )
+
+
+def _digest(payload: str, n: int = 24) -> str:
+    return hashlib.sha256(payload.encode()).hexdigest()[:n]
+
+
+def design_key(structural: str, shape, platform, iterations) -> str:
+    """Process-independent key for a ranking entry (mirrors the cache's
+    design-level key)."""
+    return repr(("design", structural, tuple(shape), platform, iterations))
+
+
+def runner_key(
+    structural: str, shape, cfg, n_used: int, iterations,
+    tile_rows: int, backend: str, align_cols: int, batched: bool,
+) -> str:
+    """Process-independent key for a compiled-executable entry.
+
+    The device count the runner actually occupies (``n_used``) and the
+    resolved backend are part of the key, so a warm replica on a
+    different pool misses here and recompiles from the persisted ranking
+    instead of loading an executable laid out for other hardware.
+    """
+    return repr((
+        "runner", structural, tuple(shape), cfg, n_used, iterations,
+        tile_rows, backend, align_cols, batched,
+    ))
+
+
+def batch_signature(arrays) -> str:
+    """Input-signature key of one staged batch: sorted (name, shape,
+    dtype) triples — the unit one serialized executable covers."""
+    return repr(tuple(sorted(
+        (n, tuple(int(d) for d in a.shape), str(a.dtype))
+        for n, a in arrays.items()
+    )))
+
+
+@dataclasses.dataclass
+class StoreStats:
+    design_hits: int = 0
+    design_misses: int = 0
+    executable_hits: int = 0
+    executable_misses: int = 0
+    writes: int = 0
+    quarantined: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class DesignStore:
+    """A persistent, multi-process-safe design store rooted at ``root``.
+
+    ``readonly=True`` never writes (no manifest update, no entry or
+    telemetry writes) — for fleet replicas that must not mutate a store
+    baked into an image.  All ``get_*`` methods return ``None`` on miss
+    and *never raise on bad entries*: undecodable files are quarantined
+    and reported as misses.
+    """
+
+    def __init__(self, root, readonly: bool = False,
+                 env_tag: str | None = None):
+        self.root = Path(root)
+        self.readonly = readonly
+        self.env_tag = env_tag or environment_tag()
+        self.stats = StoreStats()
+        self._env = self.root / self.env_tag
+        if not readonly:
+            for sub in ("designs", "executables", "quarantine"):
+                (self._env / sub).mkdir(parents=True, exist_ok=True)
+            self._update_manifest()
+
+    # ------------------------------------------------------------------
+    # manifest
+    # ------------------------------------------------------------------
+
+    def _update_manifest(self) -> None:
+        path = self.root / "manifest.json"
+        manifest = {"schema": SCHEMA_VERSION, "environments": []}
+        if path.exists():
+            try:
+                manifest = json.loads(path.read_text())
+            except (json.JSONDecodeError, OSError):
+                pass  # rewrite a fresh manifest below
+        envs = set(manifest.get("environments", ()))
+        if self.env_tag in envs and manifest.get("schema") == SCHEMA_VERSION:
+            return
+        envs.add(self.env_tag)
+        manifest = {
+            "schema": SCHEMA_VERSION,
+            "environments": sorted(envs),
+            "updated": time.time(),
+        }
+        self._atomic_write(path, json.dumps(manifest, indent=2).encode())
+
+    # ------------------------------------------------------------------
+    # framed atomic file IO
+    # ------------------------------------------------------------------
+
+    def _atomic_write(self, path: Path, data: bytes) -> None:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(
+            dir=str(path.parent), prefix=path.name, suffix=".tmp"
+        )
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(data)
+            os.replace(tmp, path)   # atomic on POSIX: readers see old or new
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def _write_entry(self, path: Path, obj) -> None:
+        if self.readonly:
+            return
+        body = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+        framed = _MAGIC + hashlib.sha256(body).digest() + body
+        self._atomic_write(path, framed)
+        self.stats.writes += 1
+
+    def _read_entry(self, path: Path):
+        """Decode one framed entry; quarantine anything undecodable."""
+        try:
+            raw = path.read_bytes()
+        except FileNotFoundError:
+            return None
+        except OSError:
+            return None
+        try:
+            if not raw.startswith(_MAGIC):
+                raise ValueError("bad magic")
+            digest, body = raw[len(_MAGIC):len(_MAGIC) + 32], \
+                raw[len(_MAGIC) + 32:]
+            if hashlib.sha256(body).digest() != digest:
+                raise ValueError("checksum mismatch")
+            return pickle.loads(body)
+        except Exception:
+            self._quarantine(path)
+            return None
+
+    def _quarantine(self, path: Path) -> None:
+        """Move a bad entry aside (atomic) so the replica keeps serving."""
+        self.stats.quarantined += 1
+        if self.readonly:
+            return
+        target = self._env / "quarantine" / f"{path.name}.{os.getpid()}"
+        try:
+            target.parent.mkdir(parents=True, exist_ok=True)
+            os.replace(path, target)
+        except OSError:
+            pass  # another replica quarantined it first
+
+    # ------------------------------------------------------------------
+    # design (ranking) entries
+    # ------------------------------------------------------------------
+
+    def _design_path(self, key: str) -> Path:
+        return self._env / "designs" / f"{_digest(key)}.pkl"
+
+    def put_design(self, key: str, spec, ranking) -> None:
+        """Persist one autotune ranking (write-through on build)."""
+        self._write_entry(self._design_path(key), {
+            "key": key,
+            "spec": spec,
+            "ranking": list(ranking),
+            "meta": self._meta(),
+        })
+
+    def get_design(self, key: str):
+        """``(spec, ranking)`` or ``None``; key echo verified (a digest
+        collision or hand-copied file serving the wrong design would be
+        silently catastrophic)."""
+        entry = self._read_entry(self._design_path(key))
+        if entry is None or entry.get("key") != key:
+            self.stats.design_misses += 1
+            return None
+        self.stats.design_hits += 1
+        return entry["spec"], entry["ranking"]
+
+    # ------------------------------------------------------------------
+    # executable entries
+    # ------------------------------------------------------------------
+
+    def _executable_path(self, key: str, signature: str) -> Path:
+        return (
+            self._env / "executables"
+            / f"{_digest(key)}.{_digest(signature, 16)}.pkl"
+        )
+
+    def put_executable(
+        self, key: str, signature: str, kind: str, blob: bytes,
+    ) -> None:
+        """Persist one compiled executable for one input signature.
+
+        One file per (runner key, signature): concurrent replicas
+        compiling different batch shapes never read-modify-write a
+        shared record.
+        """
+        self._write_entry(self._executable_path(key, signature), {
+            "key": key,
+            "signature": signature,
+            "kind": kind,
+            "blob": blob,
+            "meta": self._meta(),
+        })
+
+    def get_executable(self, key: str, signature: str):
+        """Rehydrated executable (callable) or ``None``.
+
+        Entries whose recorded device count or backend disagree with the
+        current process (defense in depth — the key already encodes
+        both) and blobs the installed jax cannot deserialize are misses,
+        never crashes: the caller recompiles from the persisted ranking.
+        """
+        entry = self._read_entry(self._executable_path(key, signature))
+        if (
+            entry is None
+            or entry.get("key") != key
+            or entry.get("signature") != signature
+        ):
+            self.stats.executable_misses += 1
+            return None
+        meta = entry.get("meta", {})
+        if (
+            meta.get("backend") != jax.default_backend()
+            or meta.get("device_count") != jax.device_count()
+        ):
+            self.stats.executable_misses += 1
+            return None
+        try:
+            loaded = compat.aot_deserialize(entry["kind"], entry["blob"])
+        except Exception:
+            # undecodable for THIS jax (e.g. executable tier written by a
+            # different minor build): not corruption, just unusable here
+            self.stats.executable_misses += 1
+            return None
+        self.stats.executable_hits += 1
+        return loaded
+
+    def _meta(self) -> dict:
+        return {
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "schema": SCHEMA_VERSION,
+            "aot_kind": compat.AOT_KIND,
+            "created": time.time(),
+            "pid": os.getpid(),
+        }
+
+    # ------------------------------------------------------------------
+    # telemetry (KeyStats / BucketStats persistence)
+    # ------------------------------------------------------------------
+
+    def _telemetry_path(self) -> Path:
+        return self._env / "telemetry.pkl"
+
+    def put_telemetry(self, keys: dict, buckets: dict) -> None:
+        """Persist serving counters (merged over what is already there).
+
+        ``keys`` maps cache key tuples to :class:`KeyStats`-shaped
+        dicts; ``buckets`` maps ``(structural, bucket)`` to
+        :class:`BucketStats`-shaped dicts.  Merge policy is
+        last-writer-wins per key: telemetry is observability input for
+        the measurement-calibrated cost model, not an exact ledger.
+        """
+        if self.readonly:
+            return
+        current = self.get_telemetry() or {"keys": {}, "buckets": {}}
+        current["keys"].update(keys)
+        current["buckets"].update(buckets)
+        self._write_entry(self._telemetry_path(), current)
+
+    def get_telemetry(self) -> dict | None:
+        entry = self._read_entry(self._telemetry_path())
+        if not isinstance(entry, dict) or "keys" not in entry:
+            return None
+        return entry
+
+    # ------------------------------------------------------------------
+    # maintenance (the `python -m repro.store` CLI surface)
+    # ------------------------------------------------------------------
+
+    def entries(self) -> list[dict]:
+        """Decoded summaries of every entry in THIS environment."""
+        out = []
+        for sub, etype in (("designs", "design"), ("executables",
+                                                   "executable")):
+            base = self._env / sub
+            if not base.is_dir():
+                continue
+            for path in sorted(base.glob("*.pkl")):
+                entry = self._read_entry(path)
+                if entry is None:
+                    out.append({
+                        "type": etype, "file": path.name,
+                        "status": "quarantined",
+                    })
+                    continue
+                meta = entry.get("meta", {})
+                out.append({
+                    "type": etype,
+                    "file": path.name,
+                    "status": "ok",
+                    "key": entry.get("key", "?"),
+                    "kind": entry.get("kind"),
+                    "bytes": path.stat().st_size if path.exists() else 0,
+                    "jax": meta.get("jax"),
+                    "backend": meta.get("backend"),
+                })
+        return out
+
+    def verify(self) -> dict:
+        """Decode every entry; corrupt ones are quarantined as a side
+        effect.  Returns ``{"ok": n, "quarantined": n}``."""
+        before = self.stats.quarantined
+        entries = self.entries()
+        ok = sum(1 for e in entries if e["status"] == "ok")
+        return {"ok": ok, "quarantined": self.stats.quarantined - before}
+
+    def environments(self) -> list[str]:
+        """Every environment directory present under the root."""
+        if not self.root.is_dir():
+            return []
+        return sorted(
+            p.name for p in self.root.iterdir()
+            if p.is_dir() and p.name.startswith("schema")
+        )
+
+    def prune(self, keep_current: bool = True) -> list[str]:
+        """Delete stale environments (and always the quarantine of the
+        current one).  Returns the removed directory names."""
+        import shutil
+
+        removed = []
+        for env in self.environments():
+            if keep_current and env == self.env_tag:
+                q = self.root / env / "quarantine"
+                if q.is_dir() and any(q.iterdir()):
+                    shutil.rmtree(q, ignore_errors=True)
+                    removed.append(f"{env}/quarantine")
+                continue
+            shutil.rmtree(self.root / env, ignore_errors=True)
+            removed.append(env)
+        if not self.readonly:
+            self._atomic_write(
+                self.root / "manifest.json",
+                json.dumps({
+                    "schema": SCHEMA_VERSION,
+                    "environments": self.environments(),
+                    "updated": time.time(),
+                }, indent=2).encode(),
+            )
+        return removed
+
+
+def as_store(store) -> DesignStore | None:
+    """Normalize a ``store=`` argument: None, a path, or a DesignStore."""
+    if store is None or isinstance(store, DesignStore):
+        return store
+    return DesignStore(store)

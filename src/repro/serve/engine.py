@@ -163,7 +163,13 @@ class StencilServer:
     double-buffered dispatch loop; ``strict`` refuses (rather than warns
     about) designs degraded by a too-small device pool and refuses
     registrations carrying error-severity static-analysis findings
-    (:mod:`repro.core.analysis`).
+    (:mod:`repro.core.analysis`).  ``store_dir`` points the server at a
+    persistent :class:`repro.runtime.DesignStore` (the FPGA-bitstream
+    analogue on disk): rankings, compiled executables, and serving
+    telemetry survive the process, so a restarted replica — or a fresh
+    replica sharing the directory — cold-starts to its first
+    bitwise-identical result without re-autotuning or re-jitting
+    (docs/DESIGN.md §Persistent design store).
     """
 
     def __init__(
@@ -180,12 +186,25 @@ class StencilServer:
         max_inflight: int = 2,
         strict: bool = False,
         max_buckets: int | None = None,
+        store_dir=None,
     ):
         assert max_batch >= 1
         assert max_inflight >= 1
         self.max_batch = max_batch
         self.platform = platform
         self.devices = devices
+        if store_dir is not None:
+            # a persistent replica: own store-backed cache (rankings +
+            # executables read/written through disk, telemetry restored).
+            # A shared in-process cache and a store-backed one are
+            # configured through cache= directly — passing both here
+            # would be ambiguous about which memoization the server owns.
+            if cache is not None:
+                raise ValueError(
+                    "pass either cache= (optionally DesignCache(store=...)) "
+                    "or store_dir=, not both"
+                )
+            cache = DesignCache(store=store_dir)
         self.cache = cache if cache is not None else default_cache()
         self.warmup = warmup
         self.backend = backend
@@ -457,7 +476,19 @@ class StencilServer:
         while inflight:
             self._resolve(inflight.popleft(), results)
         self.completed.update(results)
+        self.persist_telemetry()
         return results
+
+    def persist_telemetry(self) -> None:
+        """Write serving counters through to the cache's persistent store
+        (no-op without one), so a restarted replica resumes its per-key
+        and per-bucket statistics instead of zeroing them."""
+        if self.cache.store is None:
+            return
+        for reg in self._designs.values():
+            if reg.bucketed:
+                reg.cached.persist_stats()
+        self.cache.flush_telemetry()
 
     def serve(self, requests: list[StencilRequest]) -> list[np.ndarray]:
         """submit() + flush(), preserving request order; claims only THIS
@@ -579,5 +610,10 @@ class StencilServer:
             "misses": self.cache.misses,
             "entries": len(self.cache),
             "runner_evictions": self.cache.runner_evictions,
+            "autotune_calls": self.cache.autotune_calls,
+            "jit_builds": self.cache.jit_builds,
+            "store_hits": self.cache.store_hits,
         }
+        if self.cache.store is not None:
+            out["_store"] = self.cache.store.stats.as_dict()
         return out

@@ -1,0 +1,447 @@
+"""Persistent design store: cross-process warm start, quarantine,
+invalidation, LRU interaction, telemetry restore, CLI.
+
+The fast tests exercise the store through in-process ``DesignCache``
+instances sharing one directory (what N replicas sharing a volume do);
+the slow test proves the real thing across process boundaries with a
+subprocess child (``store_child_main.py``, generated into tmp_path).
+"""
+import json
+import os
+import pickle
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.configs import stencils
+from repro.core import model
+from repro.core.ir import lower
+from repro.core.platform import DEFAULT_TPU
+from repro.kernels import ref
+from repro.runtime import DesignCache, DesignStore, environment_tag
+from repro.runtime.cache import structural_fingerprint
+from repro.runtime.store import design_key
+from repro.store import main as store_cli
+
+RNG = np.random.default_rng(23)
+
+
+def small_spec(iterations=2, shape=(16, 8)):
+    return stencils.jacobi2d(shape=shape, iterations=iterations)
+
+
+def batch_for(spec, b=2):
+    return {
+        n: RNG.standard_normal((b,) + tuple(shape)).astype(dt)
+        for n, (dt, shape) in spec.inputs.items()
+    }
+
+
+def oracle(spec, arrays, iters):
+    one = {n: jnp.asarray(a[0]) for n, a in arrays.items()}
+    return np.asarray(ref.stencil_iterations_ref(spec, one, iters))
+
+
+def serve_once(cache, spec, arrays):
+    cached = cache.get_or_build(spec)
+    return np.asarray(cached.runner(arrays)), cached
+
+
+# --------------------------------------------------------------------------
+# warm start within one machine (two caches sharing a directory)
+# --------------------------------------------------------------------------
+
+
+def test_warm_cache_skips_autotune_and_jit(tmp_path):
+    spec = small_spec()
+    arrays = batch_for(spec)
+
+    cold = DesignCache(store=str(tmp_path / "store"))
+    out_cold, _ = serve_once(cold, spec, arrays)
+    assert cold.autotune_calls == 1
+    assert cold.jit_builds == 1
+    assert cold.store.stats.writes >= 2        # ranking + executable
+
+    warm = DesignCache(store=str(tmp_path / "store"))
+    out_warm, cached = serve_once(warm, spec, arrays)
+    assert warm.autotune_calls == 0, "warm start re-ranked the design space"
+    assert warm.jit_builds == 0, "warm start re-traced/re-compiled"
+    assert warm.store_hits >= 1
+    assert warm.store.stats.executable_hits >= 1
+    np.testing.assert_array_equal(out_cold, out_warm)
+    np.testing.assert_allclose(
+        out_warm[0], oracle(spec, arrays, spec.iterations),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+def test_autotune_store_entry_point(tmp_path):
+    from repro.core import autotune
+
+    spec = small_spec()
+    x = {"in_1": RNG.standard_normal(spec.shape).astype(np.float32)}
+    d1 = autotune(spec, store=str(tmp_path / "s"))
+    want = d1.runner(x)
+
+    cache = DesignCache(store=str(tmp_path / "s"))
+    d2 = autotune(spec, cache=cache)
+    assert cache.autotune_calls == 0           # ranking came from disk
+    np.testing.assert_allclose(d2.runner(x), want, rtol=2e-4, atol=2e-4)
+
+    other = DesignCache(store=str(tmp_path / "other"))
+    with pytest.raises(ValueError, match="conflicts"):
+        autotune(spec, cache=other, store=str(tmp_path / "s"))
+
+
+# --------------------------------------------------------------------------
+# corruption -> quarantine, never a crash
+# --------------------------------------------------------------------------
+
+
+def test_corrupt_entries_quarantined_not_fatal(tmp_path):
+    spec = small_spec()
+    arrays = batch_for(spec)
+    root = tmp_path / "store"
+    cold = DesignCache(store=str(root))
+    out_cold, _ = serve_once(cold, spec, arrays)
+
+    env = root / environment_tag()
+    victims = sorted((env / "designs").glob("*.pkl")) + sorted(
+        (env / "executables").glob("*.pkl")
+    )
+    assert victims, "cold pass wrote no entries"
+    victims[0].write_bytes(b"garbage that is not a framed entry")
+    victims[-1].write_bytes(victims[-1].read_bytes()[:20])   # truncated
+
+    warm = DesignCache(store=str(root))
+    out_warm, _ = serve_once(warm, spec, arrays)   # rebuilds what it must
+    np.testing.assert_array_equal(out_cold, out_warm)
+    assert warm.store.stats.quarantined >= 1
+    q = env / "quarantine"
+    assert q.is_dir() and any(q.iterdir()), "bad entries not moved aside"
+    # the rebuild wrote fresh replacements: a third cache is fully warm
+    third = DesignCache(store=str(root))
+    serve_once(third, spec, arrays)
+    assert third.autotune_calls == 0 and third.jit_builds == 0
+
+
+# --------------------------------------------------------------------------
+# version/environment invalidation
+# --------------------------------------------------------------------------
+
+
+def test_stale_environment_is_invisible_and_prunable(tmp_path):
+    spec = small_spec()
+    root = tmp_path / "store"
+    stale_tag = "schema0-jax0.0.1-cpu"
+    stale = DesignStore(root, env_tag=stale_tag)
+    plat = DEFAULT_TPU.with_chips(1)
+    key = design_key(structural_fingerprint(spec), spec.shape, plat, None)
+    stale.put_design(key, spec, [])
+
+    cur = DesignStore(root)
+    assert cur.get_design(key) is None         # different env dir: a miss
+    assert cur.stats.design_misses == 1
+    assert set(cur.environments()) == {stale_tag, cur.env_tag}
+
+    removed = cur.prune()
+    assert stale_tag in removed
+    assert cur.environments() == [cur.env_tag]
+    manifest = json.loads((root / "manifest.json").read_text())
+    assert manifest["environments"] == [cur.env_tag]
+
+
+def test_schema_bump_invalidates(tmp_path, monkeypatch):
+    import repro.runtime.store as store_mod
+
+    spec = small_spec()
+    root = tmp_path / "store"
+    cache = DesignCache(store=str(root))
+    cache.design(spec)
+    assert cache.store.stats.writes >= 1
+
+    monkeypatch.setattr(store_mod, "SCHEMA_VERSION", 2)
+    bumped = DesignCache(store=str(root))
+    assert bumped.store.env_tag.startswith("schema2-")
+    bumped.design(spec)                         # miss: re-autotunes cleanly
+    assert bumped.autotune_calls == 1
+    assert bumped.store.stats.design_hits == 0
+
+
+# --------------------------------------------------------------------------
+# warm ranking whose top pick does not fit the current pool
+# --------------------------------------------------------------------------
+
+
+def test_warm_ranking_revalidates_against_current_pool(tmp_path):
+    """A persisted ranking may lead with a config tuned for a bigger pool.
+    The warm replica re-validates against ITS pool: by default it serves
+    the top pick degraded — loudly (``DegradedDesignWarning``) — and
+    under ``strict=True`` it refuses the degraded config and falls back
+    to the persisted ranking's next truly-fitting candidate, recording a
+    diagnostic.  Either way: no crash, no silent mismatch, no re-rank."""
+    from repro.runtime import DegradedDesignWarning
+
+    spec = small_spec()
+    arrays = batch_for(spec)
+    root = tmp_path / "store"
+    lowered = lower(spec).spec
+
+    from repro.runtime.batching import is_degraded
+
+    big = model.choose_best(lowered, DEFAULT_TPU.with_chips(4))
+    # genuinely degraded on one device (temporal cascades degenerate to
+    # fused rounds silently by design, so pick a spatial/hybrid config)
+    multi = next(p for p in big if is_degraded(p.config, 1))
+    fit = [
+        p for p in model.choose_best(lowered, DEFAULT_TPU.with_chips(1))
+        if p.config.devices_needed <= 1
+    ]
+    assert fit, "no single-device candidate to fall back to"
+
+    plat = DEFAULT_TPU.with_chips(1)            # what a 1-device pool ranks
+    key = design_key(structural_fingerprint(spec), spec.shape, plat, None)
+    DesignStore(root).put_design(key, lowered, [multi] + fit)
+
+    warm = DesignCache(store=str(root))
+    with pytest.warns(DegradedDesignWarning):
+        out, cached = serve_once(warm, spec, arrays)
+    assert warm.autotune_calls == 0             # ranking still came warm
+    assert cached.design.config == multi.config  # degraded, not hidden
+    np.testing.assert_allclose(
+        out[0], oracle(spec, arrays, spec.iterations), rtol=2e-4, atol=2e-4,
+    )
+
+    strict = DesignCache(store=str(root))
+    cached2 = strict.get_or_build(spec, strict=True)
+    assert strict.autotune_calls == 0
+    assert cached2.design.config.devices_needed <= 1
+    assert cached2.design.diagnostics, "strict fallback left no diagnostic"
+    out2 = np.asarray(cached2.runner(arrays))
+    np.testing.assert_allclose(
+        out2[0], oracle(spec, arrays, spec.iterations), rtol=2e-4, atol=2e-4,
+    )
+
+
+# --------------------------------------------------------------------------
+# LRU eviction rebuilds from the store, not from scratch
+# --------------------------------------------------------------------------
+
+
+def test_lru_evicted_runner_rebuilds_from_store(tmp_path):
+    a = small_spec(iterations=2, shape=(16, 8))
+    b = stencils.blur(shape=(16, 8), iterations=2)
+    xa, xb = batch_for(a), batch_for(b)
+
+    cache = DesignCache(max_designs=1, store=str(tmp_path / "store"))
+    out_a, _ = serve_once(cache, a, xa)
+    serve_once(cache, b, xb)                    # evicts a's runner
+    assert cache.runner_evictions >= 1
+    builds_before = cache.jit_builds
+    out_a2, _ = serve_once(cache, a, xa)        # rebuild wrapper, warm load
+    assert cache.jit_builds == builds_before, (
+        "evicted runner re-compiled instead of loading its executable"
+    )
+    assert cache.store.stats.executable_hits >= 1
+    np.testing.assert_array_equal(out_a, out_a2)
+
+
+# --------------------------------------------------------------------------
+# telemetry persistence
+# --------------------------------------------------------------------------
+
+
+def test_telemetry_restored_across_restarts(tmp_path):
+    spec = small_spec()
+    root = str(tmp_path / "store")
+    c1 = DesignCache(store=root)
+    c1.design(spec)
+    c1.design(spec)                             # 1 miss + 1 memory hit
+    c1.flush_telemetry()
+
+    c2 = DesignCache(store=root)
+    restored = c2.stats()
+    assert restored, "restart lost the per-key telemetry"
+    (key, st), = [(k, s) for k, s in restored.items() if k[0] == "design"]
+    assert st.misses == 1 and st.hits == 1
+    assert st.build_time_s > 0
+    # the restored counters keep accumulating, not restart from zero
+    c2.design(spec)
+    assert c2.stats()[key].store_hits == 1
+
+
+def test_bucket_stats_restored_across_restarts(tmp_path):
+    spec = small_spec(iterations=2, shape=(20, 12))
+    root = str(tmp_path / "store")
+    c1 = DesignCache(store=root)
+    bd1 = c1.bucketed(spec)
+    bd1.runner_for((20, 12), count=3)
+    bucket, = bd1.buckets
+
+    c2 = DesignCache(store=root)
+    bd2 = c2.bucketed(spec)
+    st = bd2.stats()
+    assert bucket in st, "restart lost the per-bucket telemetry"
+    assert st[bucket]["requests"] == 3
+    bd2.runner_for((20, 12), count=2)           # resumes archived counters
+    assert bd2.stats()[bucket]["requests"] == 5
+
+
+# --------------------------------------------------------------------------
+# readonly stores
+# --------------------------------------------------------------------------
+
+
+def test_readonly_store_never_writes(tmp_path):
+    spec = small_spec()
+    root = tmp_path / "store"
+    DesignCache(store=str(root)).design(spec)   # populate
+
+    ro = DesignStore(root, readonly=True)
+    plat = DEFAULT_TPU.with_chips(1)
+    key = design_key(structural_fingerprint(spec), spec.shape, plat, None)
+    assert ro.get_design(key) is not None
+    before = sorted(p.name for p in root.rglob("*"))
+    ro.put_design("other-key", spec, [])
+    ro.put_telemetry({"k": {"hits": 1}}, {})
+    assert sorted(p.name for p in root.rglob("*")) == before
+    assert ro.stats.writes == 0
+
+
+# --------------------------------------------------------------------------
+# the `python -m repro.store` CLI
+# --------------------------------------------------------------------------
+
+
+def test_store_cli_list_verify_prune(tmp_path, capsys):
+    spec = small_spec()
+    root = tmp_path / "store"
+    cache = DesignCache(store=str(root))
+    serve_once(cache, spec, batch_for(spec))
+
+    assert store_cli(["list", str(root)]) == 0
+    out = capsys.readouterr().out
+    assert "design" in out and "executable" in out and "ok" in out
+
+    assert store_cli(["verify", str(root)]) == 0
+
+    victim = next((root / environment_tag() / "designs").glob("*.pkl"))
+    victim.write_bytes(b"\x00corrupt")
+    assert store_cli(["verify", str(root)]) == 1   # quarantines + reports
+    assert store_cli(["verify", str(root)]) == 0   # now clean again
+
+    (root / "schema0-jax0.0.1-cpu" / "designs").mkdir(parents=True)
+    assert store_cli(["prune", str(root)]) == 0
+    out = capsys.readouterr().out
+    assert "schema0-jax0.0.1-cpu" in out
+    assert not (root / "schema0-jax0.0.1-cpu").exists()
+
+
+# --------------------------------------------------------------------------
+# framed-entry integrity details
+# --------------------------------------------------------------------------
+
+
+def test_key_echo_rejects_wrong_entry(tmp_path):
+    """A hand-copied/digest-colliding file serving the wrong design must
+    read as a miss (key echo check), not as the wrong ranking."""
+    spec = small_spec()
+    root = tmp_path / "store"
+    st = DesignStore(root)
+    key = "a-key"
+    st.put_design(key, spec, [])
+    path = st._design_path(key)
+    wrong = st._design_path("another-key")
+    wrong.write_bytes(path.read_bytes())
+    assert st.get_design("another-key") is None
+    assert st.get_design(key) is not None
+
+
+def test_executable_entry_rejects_foreign_pool(tmp_path):
+    """Defense in depth: an executable whose recorded backend/device count
+    disagrees with this process is a miss even if the key matches."""
+    spec = small_spec()
+    arrays = batch_for(spec)
+    root = tmp_path / "store"
+    cache = DesignCache(store=str(root))
+    serve_once(cache, spec, arrays)
+
+    env = root / environment_tag()
+    path = next((env / "executables").glob("*.pkl"))
+    raw = path.read_bytes()
+    import hashlib
+
+    from repro.runtime.store import _MAGIC
+
+    body = pickle.loads(raw[len(_MAGIC) + 32:])
+    body["meta"]["device_count"] = 4096         # some other machine's pool
+    reframed = pickle.dumps(body, protocol=pickle.HIGHEST_PROTOCOL)
+    path.write_bytes(
+        _MAGIC + hashlib.sha256(reframed).digest() + reframed
+    )
+
+    warm = DesignCache(store=str(root))
+    serve_once(warm, spec, arrays)
+    assert warm.store.stats.executable_misses >= 1
+    assert warm.jit_builds == 1                 # recompiled, did not load
+
+
+# --------------------------------------------------------------------------
+# the real thing: two fresh processes sharing one store directory
+# --------------------------------------------------------------------------
+
+CHILD_SRC = textwrap.dedent("""
+    import json, sys
+    import numpy as np
+    from repro.configs import stencils
+    from repro.runtime import DesignCache
+
+    store_root, out_npy, report = sys.argv[1:4]
+    spec = stencils.jacobi2d(shape=(16, 8), iterations=2)
+    rng = np.random.default_rng(23)
+    arrays = {
+        n: rng.standard_normal((2,) + tuple(shape)).astype(dt)
+        for n, (dt, shape) in spec.inputs.items()
+    }
+    cache = DesignCache(store=store_root)
+    out = np.asarray(cache.get_or_build(spec).runner(arrays))
+    cache.flush_telemetry()
+    np.save(out_npy, out)
+    json.dump({
+        "autotune_calls": cache.autotune_calls,
+        "jit_builds": cache.jit_builds,
+        "store_hits": cache.store_hits,
+    }, open(report, "w"))
+""")
+
+
+@pytest.mark.slow
+def test_cross_process_round_trip(tmp_path):
+    child = tmp_path / "store_child_main.py"
+    child.write_text(CHILD_SRC)
+    env = dict(os.environ)
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+
+    def spawn(tag):
+        out_npy = tmp_path / f"{tag}.npy"
+        report = tmp_path / f"{tag}.json"
+        subprocess.run(
+            [sys.executable, str(child), str(tmp_path / "store"),
+             str(out_npy), str(report)],
+            check=True, env=env,
+        )
+        return np.load(out_npy), json.loads(report.read_text())
+
+    out_cold, rep_cold = spawn("cold")
+    out_warm, rep_warm = spawn("warm")
+    assert rep_cold["autotune_calls"] == 1 and rep_cold["jit_builds"] == 1
+    assert rep_warm["autotune_calls"] == 0, "warm process re-autotuned"
+    assert rep_warm["jit_builds"] == 0, "warm process re-jitted"
+    assert rep_warm["store_hits"] >= 1
+    np.testing.assert_array_equal(out_cold, out_warm)
