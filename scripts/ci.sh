@@ -34,6 +34,20 @@ echo "== lint: stock kernels + example DSL =="
 # example DSL source must verify with zero error-severity diagnostics
 python scripts/lint_stencils.py
 
+echo "== lint: machine-readable numerics pass over examples =="
+# repro.lint's JSON mode over every DSL literal embedded in examples/:
+# exits non-zero only on error-severity diagnostics, and the JSON output
+# is itself validated (this doubles as a CI check of the --format json
+# contract that editor/CI integrations consume)
+python -m repro.lint --format json --from-py examples/*.py | python -c '
+import json, sys
+doc = json.load(sys.stdin)
+assert doc["version"] == 1 and "summary" in doc, "bad lint JSON shape"
+s = doc["summary"]
+print("lint JSON ok: %d literal(s), %d error(s), %d warning(s)"
+      % (len(doc["files"]), s["errors"], s["warnings"]))
+'
+
 echo "== slow-marker audit =="
 # static guard: subprocess suites stay slow-marked, the conformance
 # suite's hypothesis profile stays CI-capped, and the pinned random-spec

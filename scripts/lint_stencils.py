@@ -11,13 +11,18 @@ Three sweeps, all through the static analyzer (repro.core.analysis):
      ast scan for literals containing a ``kernel:`` header);
   3. every standalone ``*.dsl`` file under examples/, if any.
 
+Additionally, every stock kernel must carry a *finite* certified
+rounding-error bound (repro.core.numerics) at its documented iteration
+count across all four boundary modes — a kernel whose bound diverges
+could not honestly advertise SASA's provable-equivalence story.
+
 The gate fails on any error-severity diagnostic; warnings and infos are
 printed but do not fail (hygiene findings are advisory).
 """
 from __future__ import annotations
 
-import ast
 import dataclasses
+import math
 import pathlib
 import sys
 
@@ -25,8 +30,9 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(ROOT / "src"))
 
 from repro.configs import stencils                      # noqa: E402
-from repro.core import analysis, dsl                    # noqa: E402
+from repro.core import analysis, dsl, numerics          # noqa: E402
 from repro.core.spec import Boundary                    # noqa: E402
+from repro.lint import dsl_literals                     # noqa: E402
 
 BOUNDARIES = (
     Boundary("zero"),
@@ -46,17 +52,6 @@ def gate(label: str, diags, source=None) -> bool:
     return True
 
 
-def dsl_literals(py_path: pathlib.Path) -> list[str]:
-    """String literals in a Python file that look like DSL kernels."""
-    tree = ast.parse(py_path.read_text(), filename=str(py_path))
-    out = []
-    for node in ast.walk(tree):
-        if isinstance(node, ast.Constant) and isinstance(node.value, str):
-            if "kernel:" in node.value and "output" in node.value:
-                out.append(node.value)
-    return out
-
-
 def main() -> int:
     ok = True
     shapes = {2: (64, 32), 3: (32, 16, 16)}
@@ -69,6 +64,13 @@ def main() -> int:
             sp.validate()
             label = f"stock:{name}:{boundary.kind}"
             ok &= gate(label, analysis.verify(sp))
+            rep = numerics.analyze(sp, iterations=4)
+            if not math.isfinite(rep.bound):
+                print(
+                    f"FAIL {label}: no finite certified error bound at "
+                    f"iterations=4 (rounds analyzed: {rep.rounds_analyzed})"
+                )
+                ok = False
             # re-emitted DSL text must lint clean too (round-trip + spans)
             text = dsl.format_spec(sp)
             parsed, diags = analysis.lint_text(text)
@@ -79,7 +81,8 @@ def main() -> int:
 
     examples = ROOT / "examples"
     for py in sorted(examples.glob("*.py")):
-        for i, text in enumerate(dsl_literals(py)):
+        literals = dsl_literals(py.read_text(), filename=str(py))
+        for i, text in enumerate(literals):
             _, diags = analysis.lint_text(text)
             ok &= gate(f"{py.name}[{i}]", diags, source=text)
     for f in sorted(examples.glob("*.dsl")):

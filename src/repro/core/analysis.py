@@ -115,6 +115,12 @@ DIAGNOSTIC_CODES: dict[str, str] = {
     "SASA401": "candidate schedules more VMEM than the platform budget",
     "SASA402": "iterations > 1 but the output never reads the iterate",
     "SASA403": "iteration-invariant subexpression recomputed per iteration",
+    # -- SASA5xx: certified numerics (repro.core.numerics) ----------------
+    "SASA500": "certified rounding-error bound (informational)",
+    "SASA501": "value envelope may overflow the dtype's finite range",
+    "SASA502": "harmful cancellation amplifies accumulated rounding error",
+    "SASA503": "ill-conditioned divisor amplifies rounding error",
+    "SASA510": "accumulated error bound exceeds dtype-meaningful precision",
 }
 
 
@@ -864,15 +870,20 @@ def verify(
     """
     from repro.core.ir import lower
 
+    from repro.core import numerics
+
     lowered = lower(spec).spec if optimize else spec
+    it = spec.iterations if iterations is None else int(iterations)
     diags: list[Diagnostic] = []
     diags += division_diagnostics(lowered, bucketed=bucketed)
     diags += hygiene_diagnostics(lowered)
+    diags += numerics.numerics_diagnostics(
+        lowered, iterations=it, bucketed=bucketed, optimize=False
+    )
 
     # Margin-sufficiency proof: the margins the bucket layer reserves
     # (rounds * spec.radius per side, see runtime.bucketing.bucket_margins)
     # against the inferred per-dim staleness depth.
-    it = spec.iterations if iterations is None else int(iterations)
     if spec.boundary.kind == "periodic":
         rounds = (
             min(spec.wrap_round_depth, it) if spec.wrap_index_inputs else it

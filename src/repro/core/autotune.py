@@ -186,14 +186,17 @@ def autotune(
         spec, [p.config for p in ranking], n_pool, iterations=iterations,
         k_override=len(devices) if devices is not None else None,
     )
+    from repro.core import numerics
+
+    bound_diag = numerics.bound_diagnostic(spec, iterations=iterations)
     if not build:
         return TunedDesign(
             spec, ranking[0], ranking, None, lowered.reports,
-            tuple(
+            (bound_diag,) + tuple(
                 v.diagnostic("info") for v in verdicts if not v.feasible
             ),
         )
-    diags: list[Diagnostic] = []
+    diags: list[Diagnostic] = [bound_diag]
     last_err = None
     for pred, verdict in zip(ranking, verdicts):
         runner = None

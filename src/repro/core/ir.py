@@ -305,6 +305,36 @@ def lower(
 
 
 # --------------------------------------------------------------------------
+# Error-relevant op metadata (consumed by repro.core.numerics)
+# --------------------------------------------------------------------------
+
+#: BinOp kinds that round their result (each charges one unit roundoff in
+#: the certified-numerics analysis).  Division is charged extra headroom
+#: there: backends may rewrite ``x / c`` into ``x * (1/c)``.
+ROUNDED_OPS = frozenset({"+", "-", "*", "/"})
+
+#: Ops that are exact in floating point (no new rounding error): negation
+#: and compare-select intrinsics propagate their argument's error bound
+#: unchanged; ``abs`` only flips a sign bit.
+EXACT_OPS = frozenset({"neg", "abs", "max", "min"})
+
+
+def rounding_profile(expr: Expr) -> dict[str, int]:
+    """Count of *rounded* float ops per kind, ``Let`` bindings counted once.
+
+    The per-op census behind the first-order error model: a bound of
+    roughly ``sum(counts) * u * magnitude`` per stage application.
+    ``walk`` yields each binding's sub-tree a single time, so the counts
+    reflect what a CSE'd evaluation actually executes.
+    """
+    profile: dict[str, int] = {}
+    for node in walk(expr):
+        if isinstance(node, BinOp) and node.op in ROUNDED_OPS:
+            profile[node.op] = profile.get(node.op, 0) + 1
+    return profile
+
+
+# --------------------------------------------------------------------------
 # Utilities
 # --------------------------------------------------------------------------
 

@@ -221,6 +221,37 @@ ZERO_BOUNDARY = Boundary("zero")
 
 
 # --------------------------------------------------------------------------
+# Dtype float limits (consumed by the certified-numerics analyzer)
+# --------------------------------------------------------------------------
+
+
+def _float_info(dtype: str):
+    """``np.finfo`` for a DSL dtype name, tolerating bfloat16 (ml_dtypes)."""
+    try:
+        return np.finfo(np.dtype(dtype))
+    except TypeError:
+        import ml_dtypes  # registered by jax; never a new dependency
+
+        return np.finfo(getattr(ml_dtypes, str(dtype)))
+
+
+def unit_roundoff(dtype: str) -> float:
+    """Per-op relative error budget the numerics analyzer charges ``dtype``.
+
+    This is ``eps`` (the gap from 1.0 to the next float), i.e. **twice**
+    the true unit roundoff of a correctly-rounded op (``eps/2``): the
+    2x headroom absorbs backends whose ops are faithful rather than
+    correctly rounded (docs/DESIGN.md §Certified numerics).
+    """
+    return float(_float_info(dtype).eps)
+
+
+def finite_max(dtype: str) -> float:
+    """Largest finite value of ``dtype`` (the SASA501 overflow line)."""
+    return float(_float_info(dtype).max)
+
+
+# --------------------------------------------------------------------------
 # Stages and the full spec
 # --------------------------------------------------------------------------
 

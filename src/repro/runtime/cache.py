@@ -255,9 +255,17 @@ class DesignCache:
             skey = design_key(structural, spec.shape, plat, iterations)
             got = self.store.get_design(skey)
             if got is not None:
+                from repro.core import numerics
+
                 stored_spec, ranking = got
+                # the store persists spec + ranking only; the certified
+                # bound is cheap static analysis, so recompute on warm
+                # start rather than widening the store schema
                 tuned = TunedDesign(
                     stored_spec, ranking[0], list(ranking), None,
+                    diagnostics=(numerics.bound_diagnostic(
+                        stored_spec, iterations=iterations,
+                    ),),
                 )
                 st.store_hits += 1
                 self._designs[key] = tuned
@@ -480,9 +488,15 @@ class DesignCache:
                 last_err = e
         if run is None:
             raise RuntimeError(f"no feasible configuration: {last_err}")
+        # carry the certified bound (SASA500) through from the cached
+        # design; preflight skip diags are freshly collected above, so
+        # only the numerics finding would otherwise be lost
+        carried = tuple(
+            d for d in tuned.diagnostics if d.code == "SASA500"
+        )
         design = TunedDesign(
             tuned.spec, chosen, tuned.ranking, run, tuned.lowering,
-            tuple(diags),
+            carried + tuple(diags),
         )
         return CachedDesign(
             design=design, runner=run, fingerprint=fp,

@@ -395,11 +395,22 @@ class DesignStore:
 
     def verify(self) -> dict:
         """Decode every entry; corrupt ones are quarantined as a side
-        effect.  Returns ``{"ok": n, "quarantined": n}``."""
+        effect.  Returns ``{"ok": n, "quarantined": n, "backlog": n}``
+        where ``quarantined`` counts entries quarantined by THIS pass
+        and ``backlog`` the files already sitting in this environment's
+        quarantine directory from earlier runs (cleared by
+        :meth:`prune`)."""
         before = self.stats.quarantined
         entries = self.entries()
         ok = sum(1 for e in entries if e["status"] == "ok")
-        return {"ok": ok, "quarantined": self.stats.quarantined - before}
+        q = self._env / "quarantine"
+        backlog = sum(1 for p in q.iterdir() if p.is_file()) \
+            if q.is_dir() else 0
+        return {
+            "ok": ok,
+            "quarantined": self.stats.quarantined - before,
+            "backlog": backlog,
+        }
 
     def environments(self) -> list[str]:
         """Every environment directory present under the root."""

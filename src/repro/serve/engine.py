@@ -287,6 +287,10 @@ class StencilServer:
         diags = tuple(fn(
             spec0, iterations=iterations, bucketed=bucketer is not None,
         ))
+        # every registration carries its certified rounding-error bound
+        from repro.core import numerics
+
+        diags += (numerics.bound_diagnostic(spec0, iterations=iterations),)
 
         if bucketer is not None:
             bucketed = self.cache.bucketed(

@@ -9,10 +9,13 @@ Subcommands (all take the store root as their first argument)::
 
 ``list`` prints one line per entry (type, status, size, jax/backend
 provenance) plus the environments present; ``verify`` exits non-zero
-when any entry had to be quarantined; ``prune`` deletes every
-environment directory except the current one (a jax upgrade leaves the
-old env's entries unreachable — this reclaims them) and empties the
-current environment's quarantine.
+when any entry had to be quarantined on this pass and, under
+``--strict``, also when the quarantine directory holds a backlog from
+earlier runs (so CI catches store corruption that a previous replica
+already moved aside); ``prune`` deletes every environment directory
+except the current one (a jax upgrade leaves the old env's entries
+unreachable — this reclaims them) and empties the current
+environment's quarantine.
 """
 from __future__ import annotations
 
@@ -29,6 +32,10 @@ def main(argv=None) -> int:
     )
     parser.add_argument("command", choices=("list", "verify", "prune"))
     parser.add_argument("root", help="store root directory")
+    parser.add_argument(
+        "--strict", action="store_true",
+        help="verify: also fail on a pre-existing quarantine backlog",
+    )
     args = parser.parse_args(argv)
 
     store = DesignStore(args.root, readonly=(args.command == "list"))
@@ -53,9 +60,15 @@ def main(argv=None) -> int:
         report = store.verify()
         print(
             f"verify: {report['ok']} ok, "
-            f"{report['quarantined']} quarantined"
+            f"{report['quarantined']} newly quarantined, "
+            f"{report['backlog']} in quarantine backlog"
         )
-        return 0 if report["quarantined"] == 0 else 1
+        if report["quarantined"]:
+            return 1
+        if args.strict and report["backlog"]:
+            print("strict: quarantine backlog present (prune to clear)")
+            return 1
+        return 0
     removed = store.prune()
     print(f"pruned: {', '.join(removed) or '(nothing)'}")
     return 0

@@ -297,9 +297,42 @@ input float: b(8, 8)
 output float: out(0, 0) = a(0, 0) + (b(0, 0) * 2.0 + b(1, 0))
 """
 
+# -- certified-numerics seeded defects (repro.core.numerics) --------------
+
+OVERFLOW_MUT = """kernel: OVF-MUT
+iteration: 1
+input float: a(8, 8)
+output float: out(0, 0) = a(0, 0) * 1e38 * 8.0
+"""
+
+CANCEL_MUT = """kernel: CANCEL-MUT
+iteration: 1
+input float: a(8, 8)
+output float: out(0, 0) = (a(0, 0) + 100000000.0) - 100000000.0
+"""
+
+DIVAMP_MUT = """kernel: DIVAMP-MUT
+iteration: 1
+input float: a(8, 8)
+input float: b(8, 8)
+output float: out(0, 0) = a(0, 0) / (abs(b(0, 0)) + 0.0009)
+"""
+
+BLOWUP_MUT = """kernel: BLOWUP-MUT
+iteration: 4096
+iterate: a
+input float: a(8, 8)
+output float: out(0, 0) = (a(0, -1) + a(0, 1) + a(-1, 0) + a(1, 0) \
++ a(0, 0)) / 5.0
+"""
+
 MUTATIONS = [
     # (source, expected code, severity, (line, col))
     (DIV_BAD, "SASA301", "error", (5, 27)),
+    (OVERFLOW_MUT, "SASA501", "warning", (4, 27)),
+    (CANCEL_MUT, "SASA502", "warning", (4, 27)),
+    (DIVAMP_MUT, "SASA503", "warning", (5, 27)),
+    (BLOWUP_MUT, "SASA510", "warning", (5, 15)),
     (DEAD_STAGE, "SASA210", "warning", (4, 14)),
     (UNUSED_INPUT, "SASA211", "warning", None),
     (DEAD_ITERATE, "SASA402", "warning", (6, 15)),

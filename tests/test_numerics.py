@@ -1,0 +1,325 @@
+"""Certified-numerics unit suite (:mod:`repro.core.numerics`).
+
+Four layers:
+
+  * **Exact-arithmetic soundness micro-cases** — pointwise kernels are
+    evaluated both in true rational arithmetic (``fractions.Fraction``,
+    exact for ``+ - * /``) and in per-op-rounded float32; the analyzer's
+    envelope-mode bound must cover the measured |float32 - exact| at
+    every cell.  This is soundness against *exact* reals, stronger than
+    the conformance suite's executor-vs-oracle differential.
+  * **Propagation properties** — division by a zero-straddling interval
+    is never certified; CSE'd (lowered) trees never get a worse bound
+    than their inlined form (shared subexpressions are analyzed once).
+  * **Plumbing** — the SASA500 info diagnostic rides ``autotune``'s
+    ``TunedDesign``; ``tolerance_for`` floors at one unit roundoff;
+    ``ErrorReport.table()`` renders the per-stage budget.
+  * **Lint CLI** — ``--format json`` / ``--format sarif`` schemas,
+    ``--numerics`` attachment, ``--from-py`` literal scanning, and the
+    exit-code contract (1 only on error severity, or warnings under
+    ``--werror``).
+"""
+from __future__ import annotations
+
+import io
+import json
+import math
+from fractions import Fraction
+
+import numpy as np
+import pytest
+
+from repro import lint
+from repro.configs import stencils
+from repro.core import dsl, numerics
+from repro.core.autotune import autotune
+from repro.core.ir import lower
+from repro.core.platform import DEFAULT_TPU
+from repro.core.spec import BinOp, Call, Neg, Num, Ref
+from repro.core.spec import unit_roundoff
+
+# ---------------------------------------------------------------------------
+# Exact-arithmetic soundness micro-cases
+# ---------------------------------------------------------------------------
+
+# Pointwise (radius-0) kernels: every cell is independent, so the exact
+# value is a scalar rational expression of the cell's inputs.
+MICRO_POINTWISE = [
+    """kernel: MICRO-ADDMUL
+iteration: 1
+input float: a(6, 6)
+input float: b(6, 6)
+output float: out(0, 0) = (a(0, 0) + b(0, 0)) * a(0, 0) - 0.125
+""",
+    """kernel: MICRO-DIV
+iteration: 1
+input float: a(6, 6)
+input float: b(6, 6)
+output float: out(0, 0) = a(0, 0) / (abs(b(0, 0)) + 2.0)
+""",
+    """kernel: MICRO-MINMAX
+iteration: 1
+input float: a(6, 6)
+input float: b(6, 6)
+output float: out(0, 0) = max(a(0, 0), min(b(0, 0), 0.5)) * b(0, 0)
+""",
+]
+
+
+def _eval_exact(e, env):
+    """Exact rational evaluation of a pointwise expression tree."""
+    if isinstance(e, Num):
+        return Fraction(float(e.value))
+    if isinstance(e, Ref):
+        assert all(o == 0 for o in e.offsets), "micro-cases are pointwise"
+        return env[e.name]
+    if isinstance(e, Neg):
+        return -_eval_exact(e.arg, env)
+    if isinstance(e, Call):
+        args = [_eval_exact(a, env) for a in e.args]
+        if e.fn == "abs":
+            return abs(args[0])
+        return max(args) if e.fn == "max" else min(args)
+    if isinstance(e, BinOp):
+        a, b = _eval_exact(e.lhs, env), _eval_exact(e.rhs, env)
+        return {"+": a + b, "-": a - b, "*": a * b, "/": a / b}[e.op]
+    raise TypeError(type(e))
+
+
+def _eval_f32(e, env):
+    """Per-op correctly-rounded float32 evaluation (a faithful executor)."""
+    f32 = np.float32
+    if isinstance(e, Num):
+        return f32(float(e.value))
+    if isinstance(e, Ref):
+        return env[e.name]
+    if isinstance(e, Neg):
+        return f32(-_eval_f32(e.arg, env))
+    if isinstance(e, Call):
+        args = [_eval_f32(a, env) for a in e.args]
+        if e.fn == "abs":
+            return f32(abs(args[0]))
+        return f32(max(args)) if e.fn == "max" else f32(min(args))
+    if isinstance(e, BinOp):
+        a, b = _eval_f32(e.lhs, env), _eval_f32(e.rhs, env)
+        if e.op == "+":
+            return f32(a + b)
+        if e.op == "-":
+            return f32(a - b)
+        if e.op == "*":
+            return f32(a * b)
+        return f32(a / b)
+    raise TypeError(type(e))
+
+
+@pytest.mark.parametrize("text", MICRO_POINTWISE)
+def test_envelope_bound_covers_exact_arithmetic(text):
+    """|rounded-f32 eval - exact rational eval| <= certified bound,
+    cell by cell — soundness against true reals, not another float."""
+    spec = dsl.parse(text)
+    rng = np.random.default_rng(42)
+    arrays = {
+        n: (rng.standard_normal(sh) * 3).astype(np.float32)
+        for n, (_, sh) in spec.inputs.items()
+    }
+    rep = numerics.measured_report(spec, arrays, 1)
+    assert rep.certified and rep.cell_err is not None
+    expr = spec.output_stage.expr
+    it = np.nditer(arrays[spec.iterate_input], flags=["multi_index"])
+    for _ in it:
+        idx = it.multi_index
+        cell32 = {n: a[idx] for n, a in arrays.items()}
+        exact = _eval_exact(expr, {
+            n: Fraction(float(v)) for n, v in cell32.items()
+        })
+        got = _eval_f32(expr, cell32)
+        err = abs(Fraction(float(got)) - exact)
+        assert err <= Fraction(float(rep.cell_err[idx])), (
+            f"{spec.name}@{idx}: |f32 - exact| = {float(err):.3g} exceeds "
+            f"certified {float(rep.cell_err[idx]):.3g}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Propagation properties
+# ---------------------------------------------------------------------------
+
+DIV_STRADDLE = """kernel: DIV-STRADDLE
+iteration: 1
+input float: a(8, 8)
+input float: b(8, 8)
+output float: out(0, 0) = a(0, 0) / b(0, 1)
+"""
+
+REPEATED_SUBEXPR = """kernel: CSE-CASE
+iteration: 2
+input float: a(8, 8)
+output float: out(0, 0) = (a(0, 0) * a(0, 1) + 0.25) \
+ * (a(0, 0) * a(0, 1) + 0.25)
+"""
+
+
+def test_zero_straddling_division_never_certified():
+    spec = dsl.parse(DIV_STRADDLE)
+    rep = numerics.analyze(spec, iterations=1)
+    assert not rep.certified and not math.isfinite(rep.bound)
+    # SASA301 (the interval-domain division check) owns this defect;
+    # the numerics pass must not pile SASA501/503/510 on top of it.
+    assert not any(
+        d.code in ("SASA501", "SASA503", "SASA510") for d in rep.diagnostics
+    )
+
+
+def test_cse_bound_no_worse_than_inlined():
+    """Lowering CSEs the repeated product; Let/Var reuse counts its
+    error once, so the optimized tree's bound can only tighten."""
+    spec = dsl.parse(REPEATED_SUBEXPR)
+    inlined = numerics.analyze(spec, iterations=2, optimize=False)
+    cse = numerics.analyze(
+        lower(spec).spec, iterations=2, optimize=False,
+    )
+    assert cse.certified and inlined.certified
+    assert cse.bound <= inlined.bound * (1 + 1e-12)
+
+
+def test_static_vs_measured_consistency():
+    """Measured envelopes on unit-range data stay within the static
+    unit-range bound (the static interval mode covers every dataset
+    drawn from the assumed range)."""
+    spec = stencils.get("jacobi2d", shape=(12, 8), iterations=2)
+    static = numerics.analyze(spec, iterations=2, input_range=1.0)
+    rng = np.random.default_rng(7)
+    arrays = {
+        n: rng.uniform(-1, 1, sh).astype(np.float32)
+        for n, (_, sh) in spec.inputs.items()
+    }
+    measured = numerics.measured_report(spec, arrays, 2)
+    assert static.certified and measured.certified
+    assert measured.bound <= static.bound
+
+
+# ---------------------------------------------------------------------------
+# Plumbing: reports, tolerances, TunedDesign attachment
+# ---------------------------------------------------------------------------
+
+
+def test_error_report_table_renders_budget():
+    spec = stencils.get("jacobi2d", shape=(16, 8), iterations=2)
+    rep = numerics.analyze(spec, iterations=2)
+    table = rep.table()
+    assert spec.output_name in table
+    assert "certified" in table and "iteration(s)" in table
+    assert f"{rep.bound:.3g}" in table
+
+
+def test_tolerance_floor_is_unit_roundoff():
+    spec = stencils.get("jacobi2d", shape=(8, 8), iterations=1)
+    zeros = {
+        n: np.zeros(sh, dtype=np.float32)
+        for n, (_, sh) in spec.inputs.items()
+    }
+    tol = numerics.tolerance_for(spec, 1, zeros)
+    assert tol == unit_roundoff(spec.dtype)
+
+
+def test_autotune_attaches_certified_bound():
+    spec = stencils.get("jacobi2d", shape=(32, 16), iterations=2)
+    td = autotune(spec, platform=DEFAULT_TPU, iterations=2, build=False)
+    found = [d for d in td.diagnostics if d.code == "SASA500"]
+    assert len(found) == 1
+    d = found[0]
+    assert d.severity == "info" and d.stage == spec.output_name
+    assert "certified rounding-error bound" in d.message
+    assert d.span is not None
+
+
+# ---------------------------------------------------------------------------
+# Lint CLI: machine-readable output + exit-code contract
+# ---------------------------------------------------------------------------
+
+WARN_ONLY = """kernel: CANCEL-WARN
+iteration: 1
+input float: a(8, 8)
+output float: out(0, 0) = (a(0, 0) + 100000000.0) - 100000000.0
+"""
+
+CLEAN = """kernel: CLEAN
+iteration: 1
+input float: a(8, 8)
+output float: out(0, 0) = (a(0, -1) + a(0, 1)) / 2.0
+"""
+
+
+def test_lint_json_schema_and_exit_codes():
+    buf = io.StringIO()
+    code = lint.run([("warn.dsl", WARN_ONLY)], fmt="json", out=buf)
+    assert code == 0  # warnings never gate without --werror
+    doc = json.loads(buf.getvalue())
+    assert doc["version"] == 1
+    (entry,) = doc["files"]
+    assert entry["file"] == "warn.dsl"
+    codes = {d["code"] for d in entry["diagnostics"]}
+    assert "SASA502" in codes
+    d = next(x for x in entry["diagnostics"] if x["code"] == "SASA502")
+    assert d["severity"] == "warning" and d["line"] == 4
+    assert doc["summary"]["errors"] == 0
+    assert doc["summary"]["warnings"] >= 1
+
+    assert lint.run([("warn.dsl", WARN_ONLY)],
+                    fmt="json", werror=True, out=io.StringIO()) == 1
+    # error severity (zero-straddling streamed divisor) gates by itself
+    assert lint.run([("bad.dsl", DIV_STRADDLE)],
+                    fmt="json", out=io.StringIO()) == 1
+
+
+def test_lint_sarif_output():
+    buf = io.StringIO()
+    lint.run([("warn.dsl", WARN_ONLY)], fmt="sarif", out=buf)
+    doc = json.loads(buf.getvalue())
+    assert doc["version"] == "2.1.0"
+    (run_obj,) = doc["runs"]
+    assert run_obj["tool"]["driver"]["name"] == "repro.lint"
+    rules = {r["id"] for r in run_obj["tool"]["driver"]["rules"]}
+    hits = {r["ruleId"] for r in run_obj["results"]}
+    assert "SASA502" in rules and "SASA502" in hits
+    loc = run_obj["results"][0]["locations"][0]["physicalLocation"]
+    assert loc["artifactLocation"]["uri"] == "warn.dsl"
+
+
+def test_lint_numerics_json_attachment():
+    buf = io.StringIO()
+    code = lint.run(
+        [("clean.dsl", CLEAN)], fmt="json", numerics_mode=True, out=buf,
+    )
+    assert code == 0
+    (entry,) = json.loads(buf.getvalue())["files"]
+    rep = entry["numerics"]
+    assert rep["certified"] is True
+    assert rep["bound"] is not None and rep["bound"] > 0
+    assert [s["stage"] for s in rep["stages"]] == ["out"]
+
+
+def test_lint_numerics_text_table():
+    buf = io.StringIO()
+    lint.run([("clean.dsl", CLEAN)], numerics_mode=True, out=buf)
+    text = buf.getvalue()
+    assert "certified numerics" in text
+    assert "value envelope" in text
+
+
+def test_lint_from_py_literal_scan(tmp_path):
+    py = tmp_path / "embedded.py"
+    py.write_text(
+        "X = 1\n"
+        f"KERNEL = '''{CLEAN}'''\n"
+        "NOT_A_KERNEL = 'just a string'\n"
+    )
+    assert lint.dsl_literals(py.read_text()) == [CLEAN]
+    buf = io.StringIO()
+    import contextlib
+
+    with contextlib.redirect_stdout(buf):
+        code = lint.main(["--from-py", "--format", "json", str(py)])
+    assert code == 0
+    (entry,) = json.loads(buf.getvalue())["files"]
+    assert entry["file"].endswith("embedded.py[0]")

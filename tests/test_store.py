@@ -332,13 +332,24 @@ def test_store_cli_list_verify_prune(tmp_path, capsys):
     victim = next((root / environment_tag() / "designs").glob("*.pkl"))
     victim.write_bytes(b"\x00corrupt")
     assert store_cli(["verify", str(root)]) == 1   # quarantines + reports
+    out = capsys.readouterr().out
+    assert "1 newly quarantined" in out
     assert store_cli(["verify", str(root)]) == 0   # now clean again
+    out = capsys.readouterr().out
+    assert "1 in quarantine backlog" in out
+    # the corrupt entry sits in the quarantine backlog: plain verify is
+    # green (nothing NEW quarantined) but --strict surfaces the backlog
+    assert store_cli(["verify", str(root), "--strict"]) == 1
+    out = capsys.readouterr().out
+    assert "backlog" in out
 
     (root / "schema0-jax0.0.1-cpu" / "designs").mkdir(parents=True)
     assert store_cli(["prune", str(root)]) == 0
     out = capsys.readouterr().out
     assert "schema0-jax0.0.1-cpu" in out
     assert not (root / "schema0-jax0.0.1-cpu").exists()
+    # prune emptied the current env's quarantine: strict is green again
+    assert store_cli(["verify", str(root), "--strict"]) == 0
 
 
 # --------------------------------------------------------------------------
