@@ -25,7 +25,7 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 TESTS = ROOT / "tests"
 
-SUBPROCESS_HELPERS = ("_multidevice_main", "_ep_moe_main")
+SUBPROCESS_HELPERS = ("_multidevice_main", "_ep_moe_main", "repro.serve")
 
 
 def fail(msg: str) -> None:

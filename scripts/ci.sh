@@ -81,4 +81,12 @@ echo "== smoke: analytical-model ranking accuracy =="
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
   python benchmarks/model_accuracy.py --smoke
 
+echo "== smoke: continuous-batching serving latency =="
+# Poisson open-loop trace against the flush-barrier loop and the
+# continuous scheduler over one shared cache; gates: zero drops,
+# continuous throughput >= 0.9x flush, p99 at or below the barrier's,
+# every result bitwise-identical to synchronous single-shot serve()
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+  python benchmarks/serving_latency.py --smoke
+
 echo "CI OK"

@@ -244,6 +244,34 @@ def aot_deserialize(kind: str, blob: bytes):
 
 
 # --------------------------------------------------------------------------
+# Non-blocking completion polling (continuous-batching reap path)
+# --------------------------------------------------------------------------
+
+
+def is_ready(x) -> bool:
+    """Non-blocking poll: has a dispatched device value finished computing?
+
+    True when every leaf of ``x`` reports complete — a following
+    ``jax.block_until_ready`` / runner ``finalize`` returns without
+    waiting.  Newer jax exposes ``jax.Array.is_ready()``; leaves without
+    it (host arrays, older jax) are reported ready, which degrades a
+    non-blocking reap into a blocking one — still correct, just less
+    overlapped.  This is version-sensitive surface, so it lives here
+    (scripts/check_compat_imports.py policy) rather than in the
+    scheduler that polls it.
+    """
+    for leaf in jax.tree_util.tree_leaves(x):
+        ready = getattr(leaf, "is_ready", None)
+        if callable(ready):
+            try:
+                if not ready():
+                    return False
+            except Exception:
+                continue   # polling is advisory: fall back to "ready"
+    return True
+
+
+# --------------------------------------------------------------------------
 # Element-indexed Pallas BlockSpec (overlapping input blocks)
 # --------------------------------------------------------------------------
 

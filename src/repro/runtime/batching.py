@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.core.distribute import build_runner
 from repro.core.model import ParallelismConfig
 from repro.core.spec import StencilSpec
@@ -249,6 +250,11 @@ def build_batched_runner(
     run.stage = stage
     run.dispatch = dispatch
     run.finalize = finalize
+    # non-blocking completion poll over a dispatch()'s output: the
+    # continuous-batching scheduler reaps finished micro-batches without
+    # stalling its admission loop (falls back to "ready" = blocking reap
+    # on jax versions without Array.is_ready)
+    run.ready = compat.is_ready
     # the underlying jit-wrapped batched program (single-device paths):
     # what the persistent design store AOT-lowers, compiles, and
     # serializes per input signature (None = not AOT-persistable)
@@ -340,5 +346,6 @@ def build_bucket_runner(
     run.stage = inner.stage
     run.dispatch = inner.dispatch
     run.finalize = inner.finalize
+    run.ready = getattr(inner, "ready", compat.is_ready)
     run.jitted = getattr(inner, "jitted", None)
     return run

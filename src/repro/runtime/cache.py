@@ -70,6 +70,7 @@ from repro.runtime.store import (
     batch_signature,
     design_key,
     runner_key,
+    subtract_counters,
 )
 
 
@@ -191,6 +192,12 @@ class DesignCache:
         )
         self._failed: dict[tuple, str] = {}    # infeasible-config memo
         self._stats: dict[tuple, KeyStats] = {}
+        # restored-telemetry baselines: flush_telemetry persists only the
+        # progress made by THIS cache (current - baseline), so restored
+        # history is never written back and double-counted by the store's
+        # multi-writer merge
+        self._tel_baseline: dict[tuple, dict] = {}
+        self._tel_buckets: dict[tuple, dict] = {}
         if self.store is not None:
             self._restore_telemetry()
 
@@ -208,16 +215,28 @@ class DesignCache:
                 )
             except (TypeError, ValueError):
                 continue   # stale telemetry shape: skip, don't crash
+            self._tel_baseline[key] = dataclasses.asdict(self._stats[key])
 
     def flush_telemetry(self, buckets: dict | None = None) -> None:
         """Write-through the per-key counters (and optionally per-bucket
-        counters) to the attached store; no-op without one."""
+        counters) to the attached store; no-op without one.
+
+        What is persisted is this writer's contribution only: per-key
+        deltas against the restored baselines, plus every per-bucket dict
+        any registration has handed in so far (bucket callers subtract
+        their own baselines before calling).  The store merges writers on
+        read, so totals across replicas/restarts stay exact.
+        """
         if self.store is None:
             return
-        self.store.put_telemetry(
-            {k: dataclasses.asdict(s) for k, s in self._stats.items()},
-            buckets or {},
-        )
+        if buckets:
+            self._tel_buckets.update(buckets)
+        keys = {}
+        for k, s in self._stats.items():
+            d = dataclasses.asdict(s)
+            base = self._tel_baseline.get(k)
+            keys[k] = subtract_counters(d, base) if base else d
+        self.store.put_telemetry(keys, self._tel_buckets)
 
     # ------------------------------------------------------------------
     # design level (ranking only, no executor build)
@@ -269,6 +288,9 @@ class DesignCache:
                 )
                 st.store_hits += 1
                 self._designs[key] = tuned
+                # a store hit is already a disk event: persist the counter
+                # so fleet telemetry sees warm starts, not just builds
+                self.flush_telemetry()
                 return tuned
         st.misses += 1
         self.autotune_calls += 1
@@ -415,6 +437,7 @@ class DesignCache:
         persistent_run.stage = inner_stage
         persistent_run.dispatch = dispatch
         persistent_run.finalize = inner_finalize
+        persistent_run.ready = getattr(run, "ready", compat.is_ready)
         persistent_run.store_key = store_key
         return persistent_run
 
@@ -589,6 +612,8 @@ class DesignCache:
         self._runners.clear()
         self._failed.clear()
         self._stats.clear()
+        self._tel_baseline.clear()
+        self._tel_buckets.clear()
         self.runner_evictions = 0
         self.autotune_calls = 0
         self.jit_builds = 0
@@ -681,6 +706,10 @@ class BucketedDesign:
             collections.OrderedDict()
         )
         self._evicted_stats: dict[tuple[int, ...], BucketStats] = {}
+        # restored per-bucket baselines: persist_stats() writes deltas
+        # against these, so restored history isn't double-counted by the
+        # store's multi-writer telemetry merge
+        self._tel_baseline: dict[tuple[int, ...], dict] = {}
         self.evictions: int = 0
         self._wrap_rounds = ...   # undecided until first routing
         if cache.store is not None:
@@ -703,6 +732,9 @@ class BucketedDesign:
                     )
                 except (TypeError, ValueError):
                     continue
+                self._tel_baseline[tuple(bucket)] = dataclasses.asdict(
+                    self._evicted_stats[tuple(bucket)]
+                )
 
     @property
     def wrap_rounds(self) -> int | None:
@@ -812,17 +844,20 @@ class BucketedDesign:
     def persist_stats(self) -> None:
         """Write-through this registration's per-bucket counters to the
         cache's persistent store (no-op without one); restarts restore
-        them through the archived-stats map."""
+        them through the archived-stats map.  Counters restored from the
+        store are subtracted back out before writing, so only this
+        registration's own progress lands in its writer's telemetry file
+        (the store merges writers on read)."""
         if self.cache.store is None:
             return
-        buckets = {
-            (self.structural, b): e.stats.as_dict()
-            for b, e in self._entries.items()
-        }
-        buckets.update({
-            (self.structural, b): s.as_dict()
-            for b, s in self._evicted_stats.items()
-        })
+        live = {b: e.stats.as_dict() for b, e in self._entries.items()}
+        live.update({b: s.as_dict() for b, s in self._evicted_stats.items()})
+        buckets = {}
+        for b, d in live.items():
+            base = self._tel_baseline.get(b)
+            buckets[(self.structural, b)] = (
+                subtract_counters(d, base) if base else d
+            )
         self.cache.flush_telemetry(buckets)
 
     def run(self, shape, arrays) -> "np.ndarray":

@@ -29,7 +29,8 @@ Layout and invalidation::
       <env>/                         # schema<N>-jax<version>-<backend>
         designs/<digest>.pkl         # ranking entries
         executables/<digest>.<sig>.pkl
-        telemetry.pkl
+        telemetry/<writer>.pkl       # one counter file per writer
+        telemetry.pkl                # legacy single-snapshot (read-only)
         quarantine/                  # corrupt/undecodable entries land here
 
 The **environment tag** bakes the store schema version, the jax version,
@@ -47,9 +48,12 @@ entry; concurrent writers of the *same* entry are idempotent
 (last-writer-wins on identical content).  Every entry is framed with a
 magic header + SHA-256 checksum: a corrupt, truncated, or undecodable
 file is **quarantined** (moved aside, counted, server keeps running)
-rather than crashing the replica.  Telemetry is a best-effort
-observability snapshot (last-writer-wins per environment), not an exact
-ledger.
+rather than crashing the replica.  Telemetry writes never
+read-modify-write a shared record: each writer owns one file under
+``telemetry/`` and :meth:`DesignStore.get_telemetry` merges all of them
+with the monotone-counter policy of :func:`merge_counters` (sum counts,
+max-of-maxes, recompute means from sums) — N replicas sharing a
+directory accumulate, they don't clobber.
 """
 from __future__ import annotations
 
@@ -60,6 +64,7 @@ import os
 import pickle
 import tempfile
 import time
+import uuid
 from pathlib import Path
 
 import jax
@@ -115,6 +120,69 @@ def batch_signature(arrays) -> str:
     )))
 
 
+def merge_counters(a: dict, b: dict) -> dict:
+    """Merge two counter dicts of the same shape, field-wise, under the
+    monotone-counter policy:
+
+      * booleans OR (``cache_hit`` stays sticky once any writer hit);
+      * fields named ``*max*`` take the max of the two observations;
+      * derived means (``*mean*``) are **recomputed from the merged
+        sums** (``exec_mean_s`` from ``exec_total_s / exec_count``),
+        zero-guarded, never summed or averaged naively;
+      * every other numeric field sums;
+      * non-numeric fields keep ``a``'s value.
+
+    This is what makes N telemetry writers sharing one store directory
+    accumulate instead of clobbering each other.
+    """
+    out = dict(a)
+    for k, vb in b.items():
+        if k not in out:
+            out[k] = vb
+            continue
+        va = out[k]
+        if isinstance(va, bool) or isinstance(vb, bool):
+            out[k] = bool(va) or bool(vb)
+        elif "mean" in k:
+            continue                       # recomputed from sums below
+        elif not (isinstance(va, (int, float))
+                  and isinstance(vb, (int, float))):
+            continue                       # non-numeric: first writer wins
+        elif "max" in k:
+            out[k] = max(va, vb)
+        else:
+            out[k] = va + vb
+    for k in list(out):
+        if "mean" not in k:
+            continue
+        total_key = k.replace("mean", "total")
+        count_key = k.replace("_mean_s", "_count").replace("_mean", "_count")
+        if total_key in out and count_key in out:
+            cnt = out[count_key]
+            out[k] = out[total_key] / cnt if cnt else 0.0
+    return out
+
+
+def subtract_counters(current: dict, baseline: dict) -> dict:
+    """``current - baseline`` under the same policy: the delta a writer
+    persists when its in-memory counters were *seeded* from restored
+    telemetry, so the restored history is never written back (and hence
+    never double-counted by :func:`merge_counters`).  Summed fields
+    subtract (clamped at zero); max / mean / bool fields pass through
+    (re-asserting an already-achieved max is merge-idempotent)."""
+    out = dict(current)
+    for k, vb in baseline.items():
+        va = out.get(k)
+        if (
+            isinstance(va, bool) or not isinstance(va, (int, float))
+            or not isinstance(vb, (int, float))
+            or "max" in k or "mean" in k
+        ):
+            continue
+        out[k] = max(0, va - vb) if isinstance(va, int) else max(0.0, va - vb)
+    return out
+
+
 @dataclasses.dataclass
 class StoreStats:
     design_hits: int = 0
@@ -145,6 +213,9 @@ class DesignStore:
         self.env_tag = env_tag or environment_tag()
         self.stats = StoreStats()
         self._env = self.root / self.env_tag
+        # telemetry writer identity: one counter file per store instance,
+        # so concurrent replicas never read-modify-write a shared record
+        self._writer_id = f"{os.getpid()}-{uuid.uuid4().hex[:8]}"
         if not readonly:
             for sub in ("designs", "executables", "quarantine"):
                 (self._env / sub).mkdir(parents=True, exist_ok=True)
@@ -336,29 +407,55 @@ class DesignStore:
     # ------------------------------------------------------------------
 
     def _telemetry_path(self) -> Path:
+        # legacy single-snapshot location: still read (and merged) so
+        # stores written by older builds keep their history, never written
         return self._env / "telemetry.pkl"
 
+    def _telemetry_dir(self) -> Path:
+        return self._env / "telemetry"
+
     def put_telemetry(self, keys: dict, buckets: dict) -> None:
-        """Persist serving counters (merged over what is already there).
+        """Persist THIS writer's serving counters.
 
         ``keys`` maps cache key tuples to :class:`KeyStats`-shaped
         dicts; ``buckets`` maps ``(structural, bucket)`` to
-        :class:`BucketStats`-shaped dicts.  Merge policy is
-        last-writer-wins per key: telemetry is observability input for
-        the measurement-calibrated cost model, not an exact ledger.
+        :class:`BucketStats`-shaped dicts.  Each store instance owns one
+        file under ``telemetry/`` and replaces it whole — no shared
+        read-modify-write, so concurrent replicas can never drop each
+        other's counters.  :meth:`get_telemetry` merges all writers with
+        the monotone policy of :func:`merge_counters`; callers whose
+        in-memory counters were seeded from restored telemetry persist
+        **deltas** (:func:`subtract_counters`) so history is counted
+        exactly once.
         """
         if self.readonly:
             return
-        current = self.get_telemetry() or {"keys": {}, "buckets": {}}
-        current["keys"].update(keys)
-        current["buckets"].update(buckets)
-        self._write_entry(self._telemetry_path(), current)
+        self._write_entry(
+            self._telemetry_dir() / f"{self._writer_id}.pkl",
+            {"keys": dict(keys), "buckets": dict(buckets)},
+        )
 
     def get_telemetry(self) -> dict | None:
-        entry = self._read_entry(self._telemetry_path())
-        if not isinstance(entry, dict) or "keys" not in entry:
-            return None
-        return entry
+        """All writers' counters (legacy snapshot included), merged under
+        the monotone-counter policy; ``None`` when nothing is persisted."""
+        paths = [self._telemetry_path()]
+        tdir = self._telemetry_dir()
+        if tdir.is_dir():
+            paths += sorted(tdir.glob("*.pkl"))
+        merged = None
+        for path in paths:
+            entry = self._read_entry(path)
+            if not isinstance(entry, dict) or "keys" not in entry:
+                continue
+            if merged is None:
+                merged = {"keys": {}, "buckets": {}}
+            for section in ("keys", "buckets"):
+                for k, d in entry.get(section, {}).items():
+                    have = merged[section].get(k)
+                    merged[section][k] = (
+                        merge_counters(have, d) if have else dict(d)
+                    )
+        return merged
 
     # ------------------------------------------------------------------
     # maintenance (the `python -m repro.store` CLI surface)

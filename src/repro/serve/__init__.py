@@ -4,5 +4,22 @@ from repro.serve.engine import (
     StencilRequest,
     StencilServer,
 )
+from repro.serve.scheduler import (
+    Backpressure,
+    StencilScheduler,
+    Ticket,
+)
+from repro.serve.router import (
+    StencilRouter,
+)
 
-__all__ = ["Request", "ServeEngine", "StencilRequest", "StencilServer"]
+__all__ = [
+    "Backpressure",
+    "Request",
+    "ServeEngine",
+    "StencilRequest",
+    "StencilRouter",
+    "StencilScheduler",
+    "StencilServer",
+    "Ticket",
+]

@@ -355,14 +355,33 @@ class StencilServer:
     # request path
     # ------------------------------------------------------------------
 
-    def submit(self, request: StencilRequest) -> int:
-        """Queue one grid; returns a ticket resolved by the next flush().
+    def submit(self, request: StencilRequest, claim=None) -> int:
+        """Queue one grid; returns a ticket resolved by a later flush().
 
         Requests are validated here (input names + grid shapes against
         the registered spec, bucketability under bucketing), so a
         malformed request is rejected at submit time instead of poisoning
         a later batch.  Safe to call from multiple threads.
+
+        ``claim`` makes ticket ownership explicit **at submit time**: a
+        ticket submitted under a claim token is invisible to plain
+        ``flush()`` calls and is only drained by ``flush(claim=token)``.
+        This is what lets concurrent ``serve()`` callers share one
+        server without one caller's flush stealing (and racing the
+        resolution of) another caller's tickets.
         """
+        shape = self._validate(request)
+        with self._lock:
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            self._queue.append((ticket, request, shape, claim))
+        return ticket
+
+    def _validate(self, request: StencilRequest) -> tuple:
+        """Validate one request against its registration; returns the
+        request's grid shape.  Raises on unknown designs, unknown/missing
+        inputs, shape mismatches, and unbucketable shapes — shared by
+        :meth:`submit` and the continuous scheduler's admission path."""
         if request.design not in self._designs:
             raise KeyError(
                 f"design {request.design!r} is not registered "
@@ -410,14 +429,17 @@ class StencilServer:
                 raise ValueError(
                     f"request for {request.design!r} is not bucketable: {e}"
                 ) from e
-        with self._lock:
-            ticket = self._next_ticket
-            self._next_ticket += 1
-            self._queue.append((ticket, request, shape))
-        return ticket
+        return shape
 
-    def flush(self) -> dict[int, np.ndarray]:
-        """Dispatch every queued request, micro-batched per design/bucket.
+    def flush(self, claim=None) -> dict[int, np.ndarray]:
+        """Dispatch queued requests, micro-batched per design/bucket.
+
+        ``flush()`` claims exactly the **unclaimed** tickets queued at
+        call time; ``flush(claim=token)`` claims exactly the tickets
+        submitted under ``token``.  Either way the claimed set is fixed
+        under one lock acquisition and nothing outside it is touched —
+        tickets another caller claimed at submit time can never be
+        drained (or have their resolution raced) by this call.
 
         The dispatch loop is double-buffered: while the device executes
         one micro-batch, the host stages the next; completed batches are
@@ -429,9 +451,10 @@ class StencilServer:
         exception) instead of resolving.
         """
         with self._lock:
-            queue, self._queue = self._queue, []
+            queue = [e for e in self._queue if e[3] == claim]
+            self._queue = [e for e in self._queue if e[3] != claim]
         groups: dict[tuple, list] = {}
-        for ticket, req, shape in queue:
+        for ticket, req, shape, _ in queue:
             reg = self._designs[req.design]
             bucket = reg.bucket_for(shape) if reg.bucketed else None
             groups.setdefault((req.design, bucket), []).append(
@@ -498,12 +521,17 @@ class StencilServer:
         """submit() + flush(), preserving request order; claims only THIS
         call's tickets from ``self.completed``.
 
+        Each call submits under its own claim token, so concurrent
+        serve() calls (and concurrent plain flush() callers) on one
+        server never drain each other's tickets.
+
         Raises if any of this call's requests failed to dispatch — other
         tickets' results (and this call's successful ones) stay claimable
         in ``self.completed``.
         """
-        tickets = [self.submit(r) for r in requests]
-        self.flush()
+        claim = object()
+        tickets = [self.submit(r, claim=claim) for r in requests]
+        self.flush(claim=claim)
         failed = [t for t in tickets if t in self.failures]
         if failed:
             raise RuntimeError(

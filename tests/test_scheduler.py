@@ -1,0 +1,290 @@
+"""StencilScheduler: continuous batching, SLO lanes, quotas, drain.
+
+``start=False`` schedulers are stepped deterministically (``step()`` /
+manual ``drain()``); a couple of tests run the real background thread to
+cover the drain barrier under concurrency.
+"""
+import pickle
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import stencils
+from repro.kernels import ref
+from repro.runtime import DesignCache
+from repro.serve import (
+    Backpressure,
+    StencilRequest,
+    StencilScheduler,
+    StencilServer,
+)
+
+RNG = np.random.default_rng(23)
+
+
+def grid_request(design, spec):
+    return StencilRequest(design, {
+        n: RNG.standard_normal(shape).astype(dt)
+        for n, (dt, shape) in spec.inputs.items()
+    })
+
+
+def mixed_request(design, shape):
+    return StencilRequest(design, {
+        "in_1": RNG.standard_normal(shape).astype(np.float32)
+    })
+
+
+def oracle(spec, req, iters):
+    one = {n: jnp.asarray(a) for n, a in req.arrays.items()}
+    return np.asarray(ref.stencil_iterations_ref(spec, one, iters))
+
+
+def small_server(max_batch=2, **kw):
+    spec = stencils.jacobi2d(shape=(16, 8), iterations=2)
+    srv = StencilServer(max_batch=max_batch, cache=DesignCache(),
+                        warmup=True, **kw)
+    srv.register("jac", spec)
+    return srv, spec
+
+
+def test_scheduler_results_match_oracle():
+    srv, spec = small_server(max_batch=3)
+    with StencilScheduler(srv, start=False) as sched:
+        reqs = [grid_request("jac", spec) for _ in range(5)]
+        tickets = [sched.submit(r) for r in reqs]
+        sched.drain()
+        for req, t in zip(reqs, tickets):
+            np.testing.assert_allclose(
+                t.result(), oracle(spec, req, 2), rtol=2e-4, atol=2e-4
+            )
+    st = sched.stats()
+    assert st["admitted"] == st["completed"] == 5
+    assert st["pending"] == st["inflight"] == st["failed"] == 0
+
+
+def test_priority_lanes_order_dispatch_under_contention():
+    """Six tickets contend for one design at max_batch=2: dispatch must
+    go interactive pair, then standard, then batch — by SLO deadline,
+    not submission order (batch was submitted first)."""
+    srv, spec = small_server(max_batch=2)
+    sched = StencilScheduler(srv, start=False)
+    lanes = ["batch", "batch", "standard", "standard",
+             "interactive", "interactive"]
+    tickets = {
+        lane: [] for lane in ("interactive", "standard", "batch")
+    }
+    for lane in lanes:
+        tickets[lane].append(
+            sched.submit(grid_request("jac", spec), lane=lane)
+        )
+
+    assert sched.step()                     # dispatches exactly one chunk
+    by_lane = sched.stats()["pending_by_lane"]
+    assert "interactive" not in by_lane     # urgent pair left the queue
+    assert by_lane == {"standard": 2, "batch": 2}
+
+    assert sched.step()
+    assert sched.stats()["pending_by_lane"] == {"batch": 2}
+
+    sched.drain()
+    order = {
+        lane: max(t.completed_at for t in ts)
+        for lane, ts in tickets.items()
+    }
+    assert order["interactive"] <= order["standard"] <= order["batch"]
+    assert all(t.done() for ts in tickets.values() for t in ts)
+
+
+def test_explicit_deadline_overrides_lane():
+    """A batch-lane ticket with a tight explicit deadline jumps the
+    standard-lane queue."""
+    srv, spec = small_server(max_batch=1)
+    sched = StencilScheduler(srv, start=False)
+    slow = sched.submit(grid_request("jac", spec), lane="standard")
+    urgent = sched.submit(
+        grid_request("jac", spec), lane="batch", deadline_s=0.001
+    )
+    assert sched.step()
+    assert sched.stats()["pending"] == 1
+    sched.drain()
+    assert urgent.completed_at <= slow.completed_at
+
+
+def test_tenant_quota_exhaustion_is_backpressure_not_loss():
+    srv, spec = small_server(max_batch=4)
+    sched = StencilScheduler(srv, start=False, quota=2)
+    first = [
+        sched.submit(grid_request("jac", spec), tenant="acme")
+        for _ in range(2)
+    ]
+    with pytest.raises(Backpressure) as exc_info:
+        sched.submit(grid_request("jac", spec), tenant="acme")
+    assert exc_info.value.retry_after_s > 0
+    assert "acme" in str(exc_info.value)
+
+    # other tenants are unaffected by acme's exhaustion
+    other = sched.submit(grid_request("jac", spec), tenant="zen")
+    sched.drain()
+    assert all(t.done() for t in first) and other.done()
+
+    # resolution frees the quota: the retry is admitted
+    retry = sched.submit(grid_request("jac", spec), tenant="acme")
+    sched.drain()
+    assert retry.done() and retry.exception() is None
+    assert sched.stats()["rejected"] == 1
+
+
+def test_full_queue_backpressure():
+    srv, spec = small_server()
+    sched = StencilScheduler(srv, start=False, max_queue=1)
+    kept = sched.submit(grid_request("jac", spec))
+    with pytest.raises(Backpressure):
+        sched.submit(grid_request("jac", spec))
+    sched.drain()
+    assert kept.done()
+
+
+def test_backpressure_pickles_with_retry_hint():
+    """The router ships Backpressure across process boundaries; the
+    default exception reduce would drop retry_after_s."""
+    err = pickle.loads(pickle.dumps(Backpressure("queue full", 0.25)))
+    assert isinstance(err, Backpressure)
+    assert err.retry_after_s == 0.25
+    assert "queue full" in str(err)
+
+
+def test_drain_resolves_every_ticket_with_background_thread():
+    """Regression: drain() must not return while a chunk is mid-dispatch
+    or mid-reap (popped off the in-flight deque but not yet resolved) —
+    every admitted ticket is done the moment drain() returns."""
+    srv, spec = small_server(max_batch=2)
+    with StencilScheduler(srv) as sched:       # real dispatch thread
+        for _ in range(5):
+            tickets = [
+                sched.submit(grid_request("jac", spec)) for _ in range(5)
+            ]
+            sched.drain()
+            assert all(t.done() for t in tickets), (
+                "drain() returned with unresolved tickets"
+            )
+    assert sched.stats()["completed"] == 25
+
+
+def test_unknown_design_and_lane_fail_fast():
+    srv, spec = small_server()
+    sched = StencilScheduler(srv, start=False)
+    with pytest.raises(KeyError):
+        sched.submit(grid_request("nope", spec))
+    with pytest.raises(ValueError):
+        sched.submit(grid_request("jac", spec), lane="warp-speed")
+    assert sched.stats()["pending"] == 0
+
+
+def test_dispatch_fault_resolves_tickets_with_the_error():
+    """A runner blow-up must fail the chunk's tickets, not strand them."""
+    srv, spec = small_server(max_batch=2)
+    boom = RuntimeError("device on fire")
+
+    def broken(prepared):
+        raise boom
+
+    srv._designs["jac"].cached.runner = broken
+    sched = StencilScheduler(srv, start=False)
+    tickets = [sched.submit(grid_request("jac", spec)) for _ in range(2)]
+    sched.drain()
+    for t in tickets:
+        assert t.done()
+        with pytest.raises(RuntimeError, match="device on fire"):
+            t.result()
+    st = sched.stats()
+    assert st["failed"] == 2 and st["completed"] == 0
+    assert st["outstanding_by_tenant"] == {}
+
+
+def test_async_bitwise_equal_to_sync_on_mixed_boundary_trace():
+    """The scheduler stages through the engine's own padded _prepare, so
+    a mixed-shape bucketed trace must match the synchronous serve()
+    path bit-for-bit (CPU) regardless of how batches coalesced."""
+    iters = 3
+    spec = stencils.jacobi2d(shape=(24, 16), iterations=iters)
+    cache = DesignCache()
+    shapes = [(24, 16), (20, 12), (17, 9), (30, 28), (10, 30), (31, 31),
+              (24, 16), (18, 10), (8, 8)]
+    rng_a = np.random.default_rng(7)
+    rng_b = np.random.default_rng(7)
+
+    def requests(rng):
+        return [
+            StencilRequest("jac", {
+                "in_1": rng.standard_normal(s).astype(np.float32)
+            })
+            for s in shapes
+        ]
+
+    srv_sync = StencilServer(
+        max_batch=3, cache=cache, bucketing=True, tile_rows=8,
+    )
+    srv_sync.register("jac", spec)
+    outs_sync = srv_sync.serve(requests(rng_a))
+
+    srv_async = StencilServer(
+        max_batch=3, cache=cache, bucketing=True, tile_rows=8,
+    )
+    srv_async.register("jac", spec)
+    with StencilScheduler(srv_async) as sched:
+        tickets = [sched.submit(r) for r in requests(rng_b)]
+        sched.drain()
+    outs_async = [t.result() for t in tickets]
+
+    bit_exact = jax.default_backend() == "cpu"
+    for a, s, shape in zip(outs_async, outs_sync, shapes):
+        assert a.shape == shape
+        if bit_exact:
+            np.testing.assert_array_equal(a, s)
+        else:
+            np.testing.assert_allclose(a, s, rtol=2e-4, atol=2e-4)
+
+
+def test_gather_window_coalesces_trickled_arrivals():
+    """Arrivals inside the gather window ride one batch; the window
+    lapsing dispatches a partial batch rather than waiting forever."""
+    srv, spec = small_server(max_batch=4)
+    # batch lane (5s deadline) keeps deadline slack out of the picture;
+    # only batch-full vs window-lapsed decide here
+    sched = StencilScheduler(srv, start=False, gather_window_s=2.0)
+    t1 = sched.submit(grid_request("jac", spec), lane="batch")
+    assert not sched.step()                 # 1 < max_batch, window open
+    for _ in range(3):
+        sched.submit(grid_request("jac", spec), lane="batch")
+    assert sched.step()                     # full batch dispatches now
+    sched.drain()
+    assert sched.stats()["dispatched_batches"] == 1
+    assert t1.done()
+
+    lone = StencilScheduler(srv, start=False, gather_window_s=0.005)
+    lone_t = lone.submit(grid_request("jac", spec), lane="batch")
+    time.sleep(0.01)
+    assert lone.step()                      # window lapsed: partial batch
+    lone.drain()
+    assert lone_t.done()
+
+
+def test_scheduler_stats_are_finite_clean():
+    srv, spec = small_server()
+    with StencilScheduler(srv, start=False) as sched:
+        sched.submit(grid_request("jac", spec))
+        sched.drain()
+        st = sched.stats()
+
+    def assert_finite(node):
+        if isinstance(node, dict):
+            for v in node.values():
+                assert_finite(v)
+        elif isinstance(node, (int, float)):
+            assert np.isfinite(node)
+
+    assert_finite(st)

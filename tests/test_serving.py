@@ -173,9 +173,77 @@ def test_bystander_results_survive_another_clients_failed_serve():
     srv.design("hot").cached.runner = broken
     with pytest.raises(RuntimeError, match="failed to dispatch"):
         srv.serve([grid_request("hot", hot)])      # client B fails
-    out = srv.completed.pop(bystander)             # A's result was retained
+    # B's serve() claimed only its own tickets: A's unclaimed submission
+    # is still queued, untouched by B's flush, and resolves on A's flush.
+    assert bystander not in srv.completed
+    assert bystander not in srv.failures
+    out = srv.flush()[bystander]
     np.testing.assert_allclose(
         out, oracle(jac, bystander_req, 2), rtol=2e-4, atol=2e-4)
+
+
+def test_concurrent_flush_cannot_steal_claimed_tickets():
+    """Regression: a flush racing a serve() must not drain its tickets.
+
+    Client B submits a plain (unclaimed) request, then client A runs
+    serve() on another thread while A's dispatch is held open by a gated
+    runner.  Pre-fix, A's flush snapshotted the WHOLE queue — including
+    B's ticket — so B's own flush() returned {} and this test failed.
+    Post-fix A's serve() claims only its own tickets at submit time.
+    """
+    import threading
+    iters = 2
+    spec = stencils.jacobi2d(shape=(12, 6), iterations=iters)
+    srv = StencilServer(max_batch=2, cache=DesignCache())
+    srv.register("jac", spec)
+    req_b = grid_request("jac", spec)
+    t_b = srv.submit(req_b)                 # client B: plain submit/flush
+
+    runner = srv.design("jac").cached.runner
+    started = threading.Event()
+    gate = threading.Event()
+
+    def gated(arrays):
+        started.set()
+        assert gate.wait(timeout=30)
+        return runner(arrays)
+
+    srv.design("jac").cached.runner = gated
+    out_a = []
+    thread_a = threading.Thread(
+        target=lambda: out_a.append(srv.serve([grid_request("jac", spec)]))
+    )
+    thread_a.start()
+    assert started.wait(timeout=30)         # A's flush is mid-dispatch
+    gate.set()
+    done = srv.flush()                      # client B's own flush
+    thread_a.join(timeout=60)
+    assert t_b in done
+    np.testing.assert_allclose(
+        done[t_b], oracle(spec, req_b, iters), rtol=2e-4, atol=2e-4)
+    assert len(out_a) == 1 and len(out_a[0]) == 1   # A's serve unaffected
+    assert not srv.failures
+
+
+def test_stats_finite_with_never_dispatched_design():
+    """A registered-but-never-dispatched design must not poison stats()
+    aggregation: every numeric counter (including exec_mean_s, which
+    divides by the execution count) stays finite."""
+    spec = stencils.jacobi2d(shape=(12, 6), iterations=2)
+    srv = StencilServer(max_batch=2, cache=DesignCache(), warmup=False)
+    srv.register("idle", spec)
+
+    def assert_finite(node, path=""):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                assert_finite(v, f"{path}.{k}")
+        elif isinstance(node, (int, float)):
+            assert np.isfinite(node), f"non-finite counter at {path}"
+
+    st = srv.stats()
+    assert st["idle"]["exec_count"] == 0
+    assert st["idle"]["exec_mean_s"] == 0.0
+    assert_finite(st)
 
 
 def test_sync_dispatch_mode_matches_oracle():

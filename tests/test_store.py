@@ -274,6 +274,59 @@ def test_telemetry_restored_across_restarts(tmp_path):
     assert c2.stats()[key].store_hits == 1
 
 
+def test_two_writer_telemetry_merge_is_lossless(tmp_path):
+    """Regression: two caches sharing a store must not drop each other's
+    counters.  Pre-fix, ``put_telemetry`` was last-writer-wins per key:
+    writer B's ``{store_hits: 1, misses: 0}`` replaced writer A's
+    ``{misses: 1}``, so a fresh reader saw the build history vanish."""
+    spec = small_spec()
+    root = str(tmp_path / "store")
+    a = DesignCache(store=root)
+    a.design(spec)                              # A: autotune miss, persisted
+    b = DesignCache(store=root)
+    b.design(spec)                              # B: warm store hit, persisted
+    assert b.store_hits == 1
+
+    c = DesignCache(store=root)                 # fresh reader merges both
+    (key, st), = [(k, s) for k, s in c.stats().items() if k[0] == "design"]
+    assert st.misses == 1, "writer B's flush dropped writer A's miss count"
+    assert st.store_hits == 1, "writer A's history clobbered writer B's hit"
+    assert st.build_time_s > 0
+
+
+def test_store_level_counter_merge_policy(tmp_path):
+    """get_telemetry merges writers field-wise: sums, max-of-maxes, OR'd
+    booleans, and means recomputed from the merged sums (zero-guarded)."""
+    root = tmp_path / "store"
+    w1, w2 = DesignStore(root), DesignStore(root)
+    w1.put_telemetry(
+        {"k": {"hits": 2, "exec_total_s": 1.0, "exec_count": 2,
+               "exec_max_s": 0.8, "exec_mean_s": 0.5}},
+        {("s", (8, 8)): {"requests": 3, "cache_hit": False}},
+    )
+    w2.put_telemetry(
+        {"k": {"hits": 5, "exec_total_s": 3.0, "exec_count": 6,
+               "exec_max_s": 0.6, "exec_mean_s": 0.5}},
+        {("s", (8, 8)): {"requests": 4, "cache_hit": True}},
+    )
+    tel = DesignStore(root).get_telemetry()
+    k = tel["keys"]["k"]
+    assert k["hits"] == 7 and k["exec_count"] == 8
+    assert k["exec_total_s"] == pytest.approx(4.0)
+    assert k["exec_max_s"] == pytest.approx(0.8)        # max, not sum
+    assert k["exec_mean_s"] == pytest.approx(0.5)       # 4.0 / 8, recomputed
+    bk = tel["buckets"][("s", (8, 8))]
+    assert bk["requests"] == 7 and bk["cache_hit"] is True
+
+    # zero-execution merge stays finite (the counter-edge guard)
+    w1.put_telemetry(
+        {"z": {"exec_total_s": 0.0, "exec_count": 0, "exec_mean_s": 0.0}}, {})
+    w2.put_telemetry(
+        {"z": {"exec_total_s": 0.0, "exec_count": 0, "exec_mean_s": 0.0}}, {})
+    z = DesignStore(root).get_telemetry()["keys"]["z"]
+    assert z["exec_mean_s"] == 0.0
+
+
 def test_bucket_stats_restored_across_restarts(tmp_path):
     spec = small_spec(iterations=2, shape=(20, 12))
     root = str(tmp_path / "store")
